@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+  fim_minsup           Figs 8-14: Eclat variants + Apriori vs min_sup
+  fim_scale            Fig 16: dataset-size scaling
+  fim_cores            Fig 15: executor-core scaling (subprocess per count)
+  partitioner_balance  §4.5 extension: padding efficiency per partitioner
+  kernel_microbench    kernels: popcount-support / trimatrix / containment
+  moe_balance          DESIGN §4: Eclat-style expert placement balance
+
+Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
+paper-complete sweep, BENCH_ONLY=<name> to run a single table.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
+                                       partitioner_balance)
+from benchmarks.micro import kernel_microbench, moe_balance
+
+TABLES = {
+    "fim_minsup": fim_minsup,
+    "fim_scale": fim_scale,
+    "fim_cores": fim_cores,
+    "partitioner_balance": partitioner_balance,
+    "kernel_microbench": kernel_microbench,
+    "moe_balance": moe_balance,
+}
+
+
+def main() -> None:
+    only = os.environ.get("BENCH_ONLY")
+    rows = ["name,us_per_call,derived"]
+    for name, fn in TABLES.items():
+        if only and name != only:
+            continue
+        try:
+            fn(rows)
+        except Exception as e:  # keep the harness going; report the failure
+            rows.append(f"{name},0,ERROR={type(e).__name__}:{e}")
+    print("\n".join(rows))
+
+
+if __name__ == "__main__":
+    main()

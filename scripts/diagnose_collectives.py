@@ -1,0 +1,61 @@
+"""Dump the largest collectives of a cell's compiled HLO (1-layer variant).
+
+    PYTHONPATH=src python scripts/diagnose_collectives.py <arch> <shape> [n]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import re
+import sys
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.analysis.roofline import calibration_patterns  # noqa: E402
+from repro.configs import TrainConfig, get_config  # noqa: E402
+from repro.launch.dryrun import lower_and_compile  # noqa: E402
+from repro.launch.mesh import make_mesh_named  # noqa: E402
+from repro.launch.specs import build_cell  # noqa: E402
+from repro.models.costing import costing  # noqa: E402
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    topn = int(sys.argv[3]) if len(sys.argv) > 3 else 25
+    cfg = get_config(arch)
+    base_pat, _, _ = calibration_patterns(cfg)
+    c = dataclasses.replace(cfg, pattern_override=tuple(base_pat),
+                            n_layers=len(base_pat),
+                            n_encoder_layers=1 if cfg.n_encoder_layers else 0)
+    mesh = make_mesh_named("single")
+    with mesh:
+        with costing(widen_chunks=False, unroll=True):
+            cell = build_cell(arch, shape, mesh, cfg_override=c,
+                              tcfg=TrainConfig(microbatches=1, remat="dots"))
+            _, compiled, _ = lower_and_compile(cell)
+    rows = []
+    for line in compiled.as_text().splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+((?:all|reduce|collective)[\w\-]+)\(", s)
+        if not m or m.group(2).endswith("-done"):
+            continue
+        shp, op = m.group(1), m.group(2)
+        tot = 0
+        for dt, dims in re.findall(r"(\w+)\[([\d,]*)\]", shp):
+            n = 1
+            for d in (dims.split(",") if dims else []):
+                n *= int(d)
+            byt = {"bf16": 2, "f16": 2, "f32": 4, "s32": 4, "u32": 4, "s8": 1,
+                   "pred": 1, "f64": 8}.get(dt, 0)
+            tot += n * byt
+        meta = re.search(r'op_name="([^"]+)"', s)
+        rows.append((tot, op, shp[:60], (meta.group(1) if meta else "")[-90:]))
+    rows.sort(reverse=True)
+    print(f"top {topn} collectives ({arch} x {shape}, 1 layer/kind, m=1):")
+    for tot, op, shp, name in rows[:topn]:
+        print(f"  {tot/1e6:9.1f}MB {op:20s} {shp:62s} {name}")
+
+
+if __name__ == "__main__":
+    main()

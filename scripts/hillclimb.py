@@ -1,0 +1,121 @@
+"""§Perf hillclimb driver: measure a cell under config overrides and append
+hypothesis -> change -> before/after -> verdict entries to reports/perf_log.json.
+
+    PYTHONPATH=src python scripts/hillclimb.py measure <arch> <shape> \
+        [key=value ...]                       # ModelConfig/TrainConfig fields
+    PYTHONPATH=src python scripts/hillclimb.py log <cell> <iter> \
+        --hypothesis ... --change ... --before ... --after ... --verdict ...
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import argparse
+import dataclasses
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+LOG = "reports/perf_log.json"
+
+
+def _load():
+    if os.path.exists(LOG):
+        with open(LOG) as f:
+            return json.load(f)
+    return {"cells": {}}
+
+
+def _save(log):
+    os.makedirs("reports", exist_ok=True)
+    with open(LOG, "w") as f:
+        json.dump(log, f, indent=1)
+
+
+def measure(arch, shape, overrides):
+    from repro.configs import TrainConfig, get_config
+    from repro.launch.dryrun import run_cell, _calibrate, lower_and_compile
+    from repro.launch import dryrun
+
+    cfg = get_config(arch)
+    tkw, mkw = {}, {}
+    tfields = {f.name for f in dataclasses.fields(TrainConfig)}
+    for kv in overrides:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        (tkw if k in tfields else mkw)[k] = v
+    cfg2 = dataclasses.replace(cfg, **mkw) if mkw else cfg
+    tdefaults = dict(microbatches=8, remat="dots")
+    tdefaults.update(tkw)
+    tcfg = TrainConfig(**tdefaults) if tkw else None
+
+    # run_cell but with overrides: reuse its internals
+    import jax
+    from repro.analysis.roofline import (measure_compiled, model_flops,
+                                         roofline_terms)
+    from repro.configs import SHAPES
+    from repro.launch.mesh import make_mesh_named
+    from repro.launch.specs import build_cell
+
+    mesh = make_mesh_named("single")
+    with mesh:
+        cell = build_cell(arch, shape, mesh, cfg_override=cfg2, tcfg=tcfg)
+        lowered, compiled, compile_s = lower_and_compile(cell)
+        flops_raw, bytes_raw, coll_raw, memory = measure_compiled(compiled, mesh.size)
+        # calibrated terms (same machinery as the sweep, with overrides)
+        import repro.launch.dryrun as dr
+        orig_get = dr.get_config
+        try:
+            dr.get_config = lambda name: cfg2   # calibration sees overrides
+            flops, nbytes, wire, cc, cb = dr._calibrate(
+                arch, shape, mesh, mesh.size, flops_raw, bytes_raw, coll_raw)
+        finally:
+            dr.get_config = orig_get
+    terms = roofline_terms(flops, nbytes, wire)
+    out = {
+        "arch": arch, "shape": shape, "overrides": overrides,
+        "compile_s": compile_s, "memory": memory,
+        "terms": terms.to_dict(),
+        "collective_bytes_gb": {k: v / 1e9 for k, v in cb.items()},
+        "model_over_hlo": model_flops(get_config(arch), SHAPES[shape]) /
+                          (flops * mesh.size) if flops else 0,
+    }
+    print(json.dumps(out, indent=1, default=float))
+    return out
+
+
+def main():
+    if sys.argv[1] == "measure":
+        measure(sys.argv[2], sys.argv[3], sys.argv[4:])
+        return
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cmd", choices=["log", "why", "summary"])
+    ap.add_argument("cell")
+    ap.add_argument("iter", nargs="?")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--change", default="")
+    ap.add_argument("--before", default="")
+    ap.add_argument("--after", default="")
+    ap.add_argument("--verdict", default="")
+    ap.add_argument("--text", default="")
+    args = ap.parse_args()
+    log = _load()
+    cell = log["cells"].setdefault(args.cell, {"iterations": []})
+    if args.cmd == "log":
+        cell["iterations"].append({
+            "cell": args.cell, "iter": args.iter,
+            "hypothesis": args.hypothesis, "change": args.change,
+            "before": args.before, "after": args.after,
+            "verdict": args.verdict})
+    elif args.cmd == "why":
+        cell["why"] = args.text
+    else:
+        cell["summary"] = args.text
+    _save(log)
+    print("logged")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Assemble EXPERIMENTS.md from dry-run reports + benchmark CSV + perf log.
+
+    PYTHONPATH=src python scripts/make_experiments.py
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.analysis.report import (dryrun_table, load_reports, perf_log_table,
+                                   roofline_table)
+
+HEADER = """# EXPERIMENTS
+
+System: RDD-Eclat (Singh et al. 2021) on JAX — paper reproduction +
+multi-pod LM framework.  Hardware model: TPU v5e — 197 TF/s bf16/chip,
+819 GB/s HBM/chip, ~50 GB/s/link ICI.  Meshes: single pod (data=16,
+model=16) = 256 chips; multi-pod (pod=2, data=16, model=16) = 512 chips.
+This container is CPU-only: all LM numbers below are derived from compiled
+artifacts (`.lower().compile()` with 512 forced host devices), not
+wall-clock; FIM numbers are real CPU wall-clock.
+
+## Methodology notes (read first)
+
+* **Dry-run**: every (arch x shape x mesh) cell jits the production step
+  with explicit NamedShardings and must `.lower().compile()`.
+  `memory_analysis()` gives per-device bytes; `cost_analysis()` gives
+  FLOPs/bytes; collective traffic is parsed from the post-SPMD HLO text
+  (`compiled.as_text()`) with ring-algorithm wire factors
+  (see `repro.analysis.hlo_parse`).
+* **Scan calibration**: XLA's HloCostAnalysis counts a while-loop body once,
+  so scanned layer stacks and chunked inner loops under-report.  Totals are
+  reconstructed from per-layer-kind depth deltas measured on tiny unrolled
+  variants (exact for homogeneous stages): FLOPs from cost-mode compiles
+  (inner chunks widened to one iteration — every op visible); bytes and
+  collectives from production-mode compiles (the real program; inner-scan
+  byte revisits are counted once per layer, so memory terms are lower bounds
+  for attention-heavy prefill cells).  The full-size compile is always
+  performed — it is the deliverable; calibration only refines the terms.
+* **Terms**: compute = FLOPs/dev / 197e12; memory = bytes/dev / 819e9;
+  collective = wire-bytes/dev / 50e9.  `compute frac` =
+  compute / max(terms) — the roofline fraction if overlap were perfect.
+  `MODEL/HLO` = analytic MODEL_FLOPS (6·N_active·D train, 2·N_active·D
+  inference) / calibrated HLO FLOPs — values near 1 mean the compiled
+  compute is "useful"; decode cells are small by construction (attention
+  over the KV cache dominates a 2·N·B step estimate).
+"""
+
+
+def main():
+    reports = load_reports()
+    parts = [HEADER]
+
+    parts.append("\n## §Dry-run (compile proof, memory, collective schedule)\n")
+    parts.append(
+        "Every non-skipped cell below compiled successfully on its mesh.  "
+        "Skips are the assignment-sanctioned long_500k exclusions "
+        "(DESIGN.md §4).\n")
+    parts.append(dryrun_table(reports))
+
+    parts.append("\n\n## §Roofline (single-pod, per arch x shape)\n")
+    parts.append(roofline_table(reports, mesh="single"))
+
+    if os.path.exists("reports/perf_log.json"):
+        with open("reports/perf_log.json") as f:
+            log = json.load(f)
+        parts.append("\n\n## §Perf (hypothesis -> change -> measure log)\n")
+        for cell, meta in log.get("cells", {}).items():
+            parts.append(f"\n### {cell}\n")
+            parts.append(meta.get("why", ""))
+            parts.append("\n")
+            parts.append(perf_log_table(meta["iterations"]))
+            if meta.get("summary"):
+                parts.append("\n" + meta["summary"])
+
+    if os.path.exists("reports/fim_bench.csv"):
+        parts.append("\n\n## §Paper tables (FIM wall-clock, CPU)\n")
+        parts.append("```\n" + open("reports/fim_bench.csv").read() + "```\n")
+
+    if os.path.exists("reports/experiments_extra.md"):
+        parts.append("\n" + open("reports/experiments_extra.md").read())
+
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write("\n".join(parts) + "\n")
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

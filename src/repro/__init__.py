@@ -1,0 +1,15 @@
+"""repro — RDD-Eclat (Singh et al. 2021) as a multi-pod JAX/TPU framework.
+
+Subpackages:
+  core      the paper's contribution: RDD-Eclat variants v1..v6 + Apriori baseline
+  kernels   Pallas TPU kernels (popcount support, trimatrix, flash attention)
+  models    LM substrate: 10 assigned architectures
+  configs   architecture + mining configs
+  training  optimizer / train step / checkpoint / compression / fault tolerance
+  serving   KV cache + prefill/decode engine
+  dist      sharding rules + collectives
+  data      transaction generators (paper datasets) + LM token pipeline
+  launch    mesh / dryrun / train / serve / mine drivers
+  analysis  roofline derivation from compiled HLO
+"""
+__version__ = "1.0.0"

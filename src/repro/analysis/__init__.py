@@ -1,0 +1,8 @@
+"""repro.analysis — roofline derivation from compiled HLO."""
+from .hlo_parse import CollectiveStats, parse_collectives
+from .roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, CellReport,
+                       RooflineTerms, model_flops, roofline_terms)
+
+__all__ = ["CollectiveStats", "parse_collectives", "HBM_BW", "LINK_BW",
+           "PEAK_FLOPS", "CellReport", "RooflineTerms", "model_flops",
+           "roofline_terms"]

@@ -1,0 +1,120 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+``cost_analysis`` has no collective-bytes entry, so the roofline's collective
+term is derived here: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute instruction contributes its result-shape
+bytes, scaled by the ring-algorithm wire factor for its group size g:
+
+    all-reduce        2 (g-1)/g   x bytes     (reduce-scatter + all-gather)
+    all-gather          (g-1)/g   x bytes     (result bytes)
+    reduce-scatter      (g-1)/g   x operand bytes ~= g x result bytes
+    all-to-all          (g-1)/g   x bytes
+    collective-permute  1         x bytes
+
+Instructions inside while-loop bodies (scan stages) are counted once by this
+textual pass — the roofline layer multiplies them back up with the
+scan-calibration factors (see analysis/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+__all__ = ["CollectiveStats", "parse_collectives", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: Dict[str, int]
+    bytes_raw: Dict[str, float]       # result bytes, unscaled
+    bytes_wire: Dict[str, float]      # ring-scaled wire bytes
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.bytes_wire.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count.values())
+
+
+def _shape_bytes(sig: str) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups,group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{ ")
+        if first:
+            return max(len(first.split(",")), 1)
+    return n_devices
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    ring = (g - 1) / g
+    if kind == "all-reduce":
+        return 2.0 * ring
+    if kind == "reduce-scatter":
+        return float(g) * ring  # operand = g x result
+    if kind == "collective-permute":
+        return 1.0
+    return ring  # all-gather / all-to-all
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    count: Dict[str, int] = {}
+    braw: Dict[str, float] = {}
+    bwire: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or s.startswith("//"):
+            continue
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        sig, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-reduce-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # paired with -start; count once
+        nbytes = _shape_bytes(sig)
+        g = _group_size(s, n_devices)
+        count[kind] = count.get(kind, 0) + 1
+        braw[kind] = braw.get(kind, 0.0) + nbytes
+        bwire[kind] = bwire.get(kind, 0.0) + nbytes * _wire_factor(kind, g)
+    return CollectiveStats(count=count, bytes_raw=braw, bytes_wire=bwire)

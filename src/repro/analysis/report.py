@@ -1,0 +1,141 @@
+"""EXPERIMENTS.md §Dry-run / §Roofline table generation from reports/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+__all__ = ["load_reports", "roofline_table", "dryrun_table", "perf_log_table"]
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_reports(directory: str = "reports/dryrun") -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def _fmt_ms(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    return f"{s*1e3:.2f}ms"
+
+
+def _bottleneck_note(r: dict) -> str:
+    """One sentence: what would move the dominant term down (per-cell)."""
+    t = r["terms"]
+    dom = t["dominant"]
+    kind = r.get("kind", "")
+    arch = r["arch"]
+    coll = r.get("collective_bytes", {})
+    biggest = max(coll, key=coll.get) if coll else ""
+    if dom == "collective":
+        if "grok" in arch:
+            return ("expert fission + EP removes the tp2d partial-sum ARs "
+                    "(§Perf: 15.7x)")
+        if "llama4" in arch:
+            return ("grouped-local dispatch halves the a2a; next: overlap "
+                    "a2a with expert GEMMs (§Perf)")
+        if kind == "train":
+            return (f"dominant {biggest}: narrower model axis (less TP) or "
+                    "SP/mlp_dp to trade activation ARs for weight-grad ARs "
+                    "(§Perf command-r)")
+        if kind == "prefill":
+            return ("all-gather of TP activations: sequence-parallel residual "
+                    "+ bf16 collectives")
+        return "decode collectives are per-layer score reductions; fuse via "\
+               "a decode kernel with local softmax partials"
+    if dom == "memory":
+        if kind == "decode":
+            return ("decode is weight/KV-read bound by construction; int8 KV "
+                    "+ wider batch raises arithmetic intensity")
+        if kind == "train":
+            return ("bytes dominated by activation traffic: bigger fused "
+                    "blocks (Pallas flash path on TPU) + remat=full")
+        return "flash tiling (kernels/flash_attention) cuts score-matrix traffic"
+    return "compute-bound: increase per-chip batch or reduce redundant flops"
+
+
+def roofline_table(reports: List[dict], mesh: str = "single") -> str:
+    """Markdown: per (arch x shape) three roofline terms + diagnosis."""
+    rows = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "compute frac | MODEL/HLO | peak GB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    by_key = {}
+    for r in reports:
+        if r.get("mesh") != mesh:
+            continue
+        by_key[(r["arch"], r["shape"])] = r
+    archs = sorted({k[0] for k in by_key})
+    for arch in archs:
+        for shape in SHAPE_ORDER:
+            r = by_key.get((arch, shape))
+            if r is None:
+                continue
+            if r.get("status") == "skipped":
+                rows.append(f"| {arch} | {shape} | — | — | — | — | — | — | — | "
+                            f"skipped: {r['reason'].split(';')[0].split('—')[0].strip()} |")
+                continue
+            if r.get("status") != "ok":
+                rows.append(f"| {arch} | {shape} | ERROR | | | | | | | "
+                            f"{r.get('error','')[:60]} |")
+                continue
+            t = r["terms"]
+            ratio = r["hlo_model_ratio"]
+            rows.append(
+                f"| {arch} | {shape} | {_fmt_ms(t['compute_s'])} | "
+                f"{_fmt_ms(t['memory_s'])} | {_fmt_ms(t['collective_s'])} | "
+                f"{t['dominant']} | {t['compute_fraction']:.3f} | "
+                f"{1.0/ratio if ratio else 0:.2f} | "
+                f"{r['memory']['peak_gb']:.2f} | {_bottleneck_note(r)} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(reports: List[dict]) -> str:
+    """Markdown: compile status / memory / collective schedule per cell+mesh."""
+    rows = [
+        "(multi-pod rows are the compile/sharding proof and report RAW HLO "
+        "collective counts — scan bodies counted once, so wire bytes are "
+        "not comparable to the calibrated single-pod rows.)\n",
+        "| arch | shape | mesh | status | compile s | peak GB/dev | "
+        "arg GB | temp GB | collectives (count) | wire GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(reports, key=lambda r: (r["arch"],
+                                            SHAPE_ORDER.index(r["shape"])
+                                            if r["shape"] in SHAPE_ORDER else 9,
+                                            r.get("mesh", ""))):
+        if r.get("status") == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"skipped | — | — | — | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR | — | — | — | — | — | — |")
+            continue
+        colls = ", ".join(f"{k}:{v}" for k, v in
+                          sorted(r["collective_counts"].items()) if v)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['compile_s']:.0f} | {r['memory']['peak_gb']:.2f} | "
+            f"{r['memory']['argument_gb']:.2f} | {r['memory']['temp_gb']:.2f} | "
+            f"{colls} | {r['wire_bytes_per_device']/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def perf_log_table(entries: List[dict]) -> str:
+    rows = [
+        "| cell | iter | hypothesis | change | before (dom) | after (dom) | verdict |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        rows.append(
+            f"| {e['cell']} | {e['iter']} | {e['hypothesis']} | {e['change']} | "
+            f"{e['before']} | {e['after']} | {e['verdict']} |")
+    return "\n".join(rows)

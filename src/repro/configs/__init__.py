@@ -1,0 +1,38 @@
+"""Architecture registry: the 10 assigned archs (+ the paper's FIM configs).
+
+Every config is importable as ``repro.configs.<module>.CONFIG`` and
+selectable via ``get_config("<arch-id>")`` / ``--arch <id>`` on the
+launchers.  Source citations are in each module's docstring.
+"""
+from __future__ import annotations
+
+from .base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def list_configs():
+    if not _REGISTRY:
+        _load_all()
+    return sorted(_REGISTRY)
+
+
+def _load_all():
+    from . import (command_r_35b, gemma3_4b, gemma_2b, grok_1_314b,
+                   hymba_1_5b, internlm2_20b, llama4_maverick_400b,
+                   phi3_vision_4_2b, whisper_base, xlstm_1_3b)  # noqa: F401
+
+
+__all__ = ["ModelConfig", "ShapeConfig", "TrainConfig", "SHAPES",
+           "get_config", "list_configs", "register"]

@@ -1,0 +1,40 @@
+"""repro.core — RDD-Eclat (the paper's contribution) on JAX.
+
+Public surface:
+  mine / EclatConfig / EclatResult     level-wise RDD-Eclat, variants v1..v6
+  apriori_mine                          YAFIM-style Spark-Apriori baseline
+  bruteforce_fim                        exact oracle for tests
+  build_vertical / filter_transactions  vertical DB construction
+  assign_partitions / partition_stats   equivalence-class partitioners
+  recover_partition                     lineage-based partition recovery
+  generate_rules                        ARM step 2
+"""
+from .apriori import AprioriResult, apriori_mine
+from .eclat import VARIANTS, EclatConfig, EclatResult, mine
+from .itemsets import ItemsetStore, LevelRecord, generate_rules
+from .lineage import load_mining_checkpoint, recover_partition, save_mining_checkpoint
+from .oracle import bruteforce_fim
+from .partitioners import (
+    PARTITIONERS,
+    assign_partitions,
+    default_partitioner,
+    greedy_partitioner,
+    hash_partitioner,
+    partition_stats,
+    reverse_hash_partitioner,
+)
+from .vertical import VerticalDB, build_vertical, filter_transactions
+from .accumulator import HostAccumulator, build_vertical_accumulated
+
+__all__ = [
+    "AprioriResult", "apriori_mine",
+    "VARIANTS", "EclatConfig", "EclatResult", "mine",
+    "ItemsetStore", "LevelRecord", "generate_rules",
+    "load_mining_checkpoint", "recover_partition", "save_mining_checkpoint",
+    "bruteforce_fim",
+    "PARTITIONERS", "assign_partitions", "default_partitioner",
+    "greedy_partitioner", "hash_partitioner", "partition_stats",
+    "reverse_hash_partitioner",
+    "VerticalDB", "build_vertical", "filter_transactions",
+    "HostAccumulator", "build_vertical_accumulated",
+]

@@ -1,0 +1,165 @@
+"""Packed-bitmap tidsets — the TPU-native vertical data format.
+
+The paper stores a tidset as a variable-length list of transaction ids and
+intersects tidsets by merging id lists.  On TPU that access pattern is
+hostile (pointer chasing, data-dependent shapes), so the framework adopts the
+dense *bitmap* encoding of the vertical database:
+
+    B[i, w] : uint32   bit t%32 of word t//32 set  <=>  item i in txn t
+
+Intersection becomes a bitwise AND over words (VPU) and support counting a
+``lax.population_count`` reduction — fixed-shape, fully vectorizable, and the
+2-itemset "triangular matrix" of the paper becomes a blocked popcount-matmul
+(see ``repro.kernels.trimatrix``).
+
+All helpers here exist in two forms: a NumPy form (host-side encode/compact,
+used by the driver the way Spark's driver owns dataset prep) and a jnp form
+(device-side inner loop).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+_WORD_DTYPE = np.uint32
+
+__all__ = [
+    "WORD_BITS",
+    "n_words",
+    "pack_bool_matrix",
+    "unpack_bitmap",
+    "pack_transactions",
+    "popcount_np",
+    "support_np",
+    "support",
+    "intersect_support",
+    "pair_intersect",
+    "bitmap_or_reduce",
+    "column_compact",
+]
+
+
+def n_words(n_txn: int) -> int:
+    """Number of uint32 words needed for ``n_txn`` transaction columns."""
+    return (int(n_txn) + WORD_BITS - 1) // WORD_BITS
+
+
+def pack_bool_matrix(dense: np.ndarray) -> np.ndarray:
+    """Pack a boolean ``(n_items, n_txn)`` matrix into ``(n_items, W)`` uint32.
+
+    Bit layout: transaction ``t`` lives in word ``t // 32`` at bit ``t % 32``.
+    """
+    dense = np.asarray(dense, dtype=bool)
+    if dense.ndim != 2:
+        raise ValueError(f"expected 2-D bool matrix, got shape {dense.shape}")
+    n_items, n_txn = dense.shape
+    w = n_words(n_txn)
+    padded = np.zeros((n_items, w * WORD_BITS), dtype=bool)
+    padded[:, :n_txn] = dense
+    lanes = padded.reshape(n_items, w, WORD_BITS)
+    weights = (np.uint64(1) << np.arange(WORD_BITS, dtype=np.uint64)).astype(np.uint64)
+    packed = (lanes.astype(np.uint64) * weights).sum(axis=-1)
+    return packed.astype(_WORD_DTYPE)
+
+
+def unpack_bitmap(packed: np.ndarray, n_txn: int) -> np.ndarray:
+    """Inverse of :func:`pack_bool_matrix` (host-side; used for compaction)."""
+    packed = np.asarray(packed, dtype=_WORD_DTYPE)
+    n_items, w = packed.shape
+    bits = (packed[:, :, None] >> np.arange(WORD_BITS, dtype=_WORD_DTYPE)) & 1
+    dense = bits.reshape(n_items, w * WORD_BITS).astype(bool)
+    return dense[:, :n_txn]
+
+
+def pack_transactions(transactions, n_items: int) -> np.ndarray:
+    """Encode a horizontal database (iterable of item-id iterables) into the
+    packed vertical bitmap ``(n_items, W)``.
+
+    This is Phase-1's ``flatMapToPair -> groupByKey`` collapsed into a single
+    scatter: each (item, tid) pair sets one bit.
+    """
+    txns = [np.asarray(sorted(set(int(i) for i in t)), dtype=np.int64) for t in transactions]
+    n_txn = len(txns)
+    w = n_words(n_txn)
+    packed = np.zeros((n_items, w), dtype=np.uint64)
+    for tid, items in enumerate(txns):
+        if items.size == 0:
+            continue
+        if items.min() < 0 or items.max() >= n_items:
+            raise ValueError(f"txn {tid} has item outside [0, {n_items})")
+        packed[items, tid // WORD_BITS] |= np.uint64(1) << np.uint64(tid % WORD_BITS)
+    return packed.astype(_WORD_DTYPE)
+
+
+def popcount_np(x: np.ndarray) -> np.ndarray:
+    """Per-element popcount for host-side uint32 arrays."""
+    x = np.asarray(x, dtype=np.uint64)
+    # SWAR popcount
+    x = x - ((x >> np.uint64(1)) & np.uint64(0x5555555555555555))
+    x = (x & np.uint64(0x3333333333333333)) + ((x >> np.uint64(2)) & np.uint64(0x3333333333333333))
+    x = (x + (x >> np.uint64(4))) & np.uint64(0x0F0F0F0F0F0F0F0F)
+    return ((x * np.uint64(0x0101010101010101)) >> np.uint64(56)).astype(np.int64)
+
+
+def support_np(packed: np.ndarray) -> np.ndarray:
+    """Host-side row supports of a packed bitmap ``(n, W)`` -> ``(n,)``."""
+    return popcount_np(packed).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# jnp device-side primitives (the executor-task inner loop)
+# ---------------------------------------------------------------------------
+
+def support(packed: jax.Array) -> jax.Array:
+    """Row supports ``(..., W) -> (...)`` on device."""
+    return jax.lax.population_count(packed).astype(jnp.int32).sum(axis=-1)
+
+
+def intersect_support(a: jax.Array, b: jax.Array):
+    """AND two bitmap batches and return (intersection, support).
+
+    The paper's Algorithm-1 lines 8-9:
+        tidset(A_ij) = tidset(A_i) ∩ tidset(A_j);  σ = |tidset(A_ij)|
+    """
+    inter = jnp.bitwise_and(a, b)
+    return inter, support(inter)
+
+
+@jax.jit
+def pair_intersect(bitmaps: jax.Array, left: jax.Array, right: jax.Array):
+    """Gather rows ``left``/``right`` from ``bitmaps`` and intersect them.
+
+    bitmaps : (P, W) uint32 frontier tidsets
+    left/right : (Q,) int32 pair indices (candidate = itemset(left) ∪ item(right))
+    returns (Q, W) intersections and (Q,) supports.
+    """
+    a = jnp.take(bitmaps, left, axis=0)
+    b = jnp.take(bitmaps, right, axis=0)
+    return intersect_support(a, b)
+
+
+@jax.jit
+def bitmap_or_reduce(packed: jax.Array) -> jax.Array:
+    """OR-reduce rows: which transaction columns are touched by any row."""
+    return jax.lax.reduce(
+        packed, jnp.uint32(0), jax.lax.bitwise_or, dimensions=(0,)
+    )
+
+
+def column_compact(packed: np.ndarray, n_txn: int, keep_cols: np.ndarray):
+    """Re-pack a bitmap keeping only ``keep_cols`` transaction columns.
+
+    This is the bitmap form of the paper's filtered-transaction technique
+    (EclatV2, Borgelt): after dropping infrequent items, transactions that
+    became empty are removed, shrinking the packed width W and hence every
+    subsequent AND/popcount.  Host-side (driver) operation.
+    """
+    keep_cols = np.asarray(keep_cols)
+    if keep_cols.dtype == bool:
+        keep_idx = np.nonzero(keep_cols[:n_txn])[0]
+    else:
+        keep_idx = keep_cols
+    dense = unpack_bitmap(packed, n_txn)
+    return pack_bool_matrix(dense[:, keep_idx]), int(keep_idx.shape[0])

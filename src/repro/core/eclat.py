@@ -1,0 +1,400 @@
+"""RDD-Eclat on JAX: the paper's five variants (plus a beyond-paper sixth).
+
+Execution model (see DESIGN.md §2): the host process plays the Spark driver —
+it owns data-dependent control flow (class segmentation, survivor compaction,
+checkpointing) — while devices execute fixed-shape batched AND+popcount over
+bucket-padded pair lists (the executor tasks).  Equivalence classes are
+assigned to partitions once, from their 1-length prefix, and descendants
+never migrate: the mining is communication-free after partitioning, exactly
+the property the paper engineers on Spark.
+
+Variants:
+  v1  vertical build via scatter, no filtering, default partitioner
+  v2  + filtered transactions (bitmap column compaction)
+  v3  + accumulator-built vertical DB (psum path)
+  v4  v3 + hash partitioner (p user-set)
+  v5  v3 + reverse-hash partitioner
+  v6  (beyond paper) v3 + greedy-LPT partitioner, optional dEclat diffsets
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import bitmap as bm
+from .accumulator import build_vertical_accumulated
+from .equivalence import class_segments, pair_work, segment_pairs
+from .itemsets import ItemsetStore, LevelRecord
+from .partitioners import assign_partitions, partition_stats
+from .triangular import cooccurrence_counts, frequent_pairs
+from .vertical import VerticalDB, build_vertical, filter_transactions, filtering_reduction
+
+__all__ = ["EclatConfig", "EclatResult", "mine", "VARIANTS"]
+
+VARIANTS: Dict[str, dict] = {
+    "v1": dict(filter_txns=False, accumulator=False, partitioner="default"),
+    "v2": dict(filter_txns=True, accumulator=False, partitioner="default"),
+    "v3": dict(filter_txns=True, accumulator=True, partitioner="default"),
+    "v4": dict(filter_txns=True, accumulator=True, partitioner="hash"),
+    "v5": dict(filter_txns=True, accumulator=True, partitioner="reverse_hash"),
+    "v6": dict(filter_txns=True, accumulator=True, partitioner="greedy"),
+}
+
+
+@dataclasses.dataclass
+class EclatConfig:
+    min_sup: float                      # fraction (<1) or absolute count (>=1)
+    variant: str = "v4"
+    p: int = 10                         # partitions for v4/v5/v6 (paper: p=10)
+    tri_matrix: Optional[bool] = None   # None = auto (paper's triMatrixMode)
+    tri_matrix_max_items: int = 4096    # auto threshold (paper: item-id range)
+    use_diffsets: bool = False          # v6 only (dEclat)
+    backend: str = "batched"            # batched | sharded
+    max_k: Optional[int] = None
+    bucket_min: int = 1024              # pair-buffer bucket floor
+    chunk_pairs: int = 1 << 18          # level-2 chunking when tri-matrix off
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every_level: bool = False
+
+    def resolve_min_sup(self, n_txn: int) -> int:
+        if self.min_sup >= 1:
+            return int(self.min_sup)
+        return max(1, int(math.ceil(self.min_sup * n_txn)))
+
+
+@dataclasses.dataclass
+class EclatResult:
+    store: ItemsetStore
+    db: VerticalDB
+    stats: dict
+
+    @property
+    def counts(self) -> List[int]:
+        return self.store.counts
+
+    @property
+    def total(self) -> int:
+        return self.store.total
+
+    def itemsets(self):
+        return self.store.itemsets()
+
+    def support_map(self):
+        return self.store.support_map()
+
+
+# ---------------------------------------------------------------------------
+# device executors
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int, floor: int) -> int:
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return b
+
+
+@jax.jit
+def _pairs_tidset(bitmaps, left, right):
+    a = jnp.take(bitmaps, left, axis=0)
+    b = jnp.take(bitmaps, right, axis=0)
+    inter = jnp.bitwise_and(a, b)
+    return inter, jax.lax.population_count(inter).astype(jnp.int32).sum(-1)
+
+
+@jax.jit
+def _pairs_diffset(bitmaps, left, right, sup_left):
+    """dEclat: d(Pab) = d(Pb) \\ d(Pa); sup = sup(Pa) - |d(Pab)|."""
+    a = jnp.take(bitmaps, left, axis=0)
+    b = jnp.take(bitmaps, right, axis=0)
+    diff = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    return diff, sup_left - jax.lax.population_count(diff).astype(jnp.int32).sum(-1)
+
+
+@jax.jit
+def _pairs_tid_to_diff(bitmaps, left, right, sup_left):
+    """Tidset -> diffset switch level: d(ij) = t(i) \\ t(j)."""
+    a = jnp.take(bitmaps, left, axis=0)
+    b = jnp.take(bitmaps, right, axis=0)
+    diff = jnp.bitwise_and(a, jnp.bitwise_not(b))
+    return diff, sup_left - jax.lax.population_count(diff).astype(jnp.int32).sum(-1)
+
+
+class _Executor:
+    """Runs padded pair batches; batched (1-device) or shard_map (D devices)."""
+
+    def __init__(self, cfg: EclatConfig, mesh: Optional[jax.sharding.Mesh], axis: str = "data"):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axis = axis
+        self.n_intersections = 0
+        self.n_padded = 0
+        self.device_pair_counts: List[np.ndarray] = []
+        if mesh is not None:
+            d = mesh.shape[axis]
+
+            def _local(bitmaps, left, right, sup_left, mode):
+                # left/right/sup_left arrive as this device's (qmax,) slice
+                if mode == 0:
+                    return _pairs_tidset(bitmaps, left, right)
+                if mode == 1:
+                    return _pairs_tid_to_diff(bitmaps, left, right, sup_left)
+                return _pairs_diffset(bitmaps, left, right, sup_left)
+
+            self._sharded = {
+                mode: jax.jit(
+                    jax.shard_map(
+                        lambda bms, l, r, s, _m=mode: _local(bms, l, r, s, _m),
+                        mesh=mesh,
+                        in_specs=(P(), P(axis), P(axis), P(axis)),
+                        out_specs=(P(axis), P(axis)),
+                    )
+                )
+                for mode in (0, 1, 2)
+            }
+            self.n_devices = d
+        else:
+            self.n_devices = 1
+
+    def run(self, bitmaps, left, right, sup_left, device_of_pair, mode: int):
+        """mode: 0=tidset AND, 1=tidset->diffset, 2=diffset.
+
+        Returns (out_bitmaps, supports) aligned with the input pair order.
+        """
+        q = left.shape[0]
+        self.n_intersections += int(q)
+        if self.mesh is None:
+            qb = _bucket(q, self.cfg.bucket_min)
+            lpad = np.zeros(qb, np.int32)
+            rpad = np.zeros(qb, np.int32)
+            spad = np.zeros(qb, np.int32)
+            lpad[:q], rpad[:q], spad[:q] = left, right, sup_left
+            if mode == 0:
+                out, sup = _pairs_tidset(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad))
+            elif mode == 1:
+                out, sup = _pairs_tid_to_diff(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad), jnp.asarray(spad))
+            else:
+                out, sup = _pairs_diffset(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad), jnp.asarray(spad))
+            self.n_padded += qb - q
+            return out, np.asarray(sup)[:q], np.arange(q)
+
+        # sharded: order pairs by device, pad each device block to the bucket
+        d = self.n_devices
+        order = np.argsort(device_of_pair, kind="stable")
+        counts = np.bincount(device_of_pair, minlength=d)
+        self.device_pair_counts.append(counts)
+        qmax = _bucket(int(counts.max()) if q else 1, self.cfg.bucket_min)
+        lpad = np.zeros((d, qmax), np.int32)
+        rpad = np.zeros((d, qmax), np.int32)
+        spad = np.zeros((d, qmax), np.int32)
+        slot_of_pair = np.empty(q, np.int64)
+        off = 0
+        for dev in range(d):
+            c = int(counts[dev])
+            idx = order[off: off + c]
+            lpad[dev, :c] = left[idx]
+            rpad[dev, :c] = right[idx]
+            spad[dev, :c] = sup_left[idx]
+            slot_of_pair[idx] = dev * qmax + np.arange(c)
+            off += c
+        self.n_padded += d * qmax - q
+        out, sup = self._sharded[mode](
+            bitmaps,
+            jnp.asarray(lpad.reshape(d * qmax)),
+            jnp.asarray(rpad.reshape(d * qmax)),
+            jnp.asarray(spad.reshape(d * qmax)),
+        )
+        return out, np.asarray(sup).reshape(-1)[slot_of_pair], slot_of_pair
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _build_db(transactions, n_items, abs_min_sup, spec, mesh) -> Tuple[VerticalDB, dict]:
+    info: dict = {}
+    if spec["accumulator"]:
+        db = build_vertical_accumulated(
+            transactions, n_items, abs_min_sup, order="support_asc",
+            mesh=mesh if mesh is not None else None,
+        )
+    else:
+        db = build_vertical(transactions, n_items, abs_min_sup, order="support_asc")
+    if spec["filter_txns"]:
+        before = db
+        db = filter_transactions(db)
+        info["filter_reduction"] = filtering_reduction(before, db)
+    return db, info
+
+
+def mine(
+    transactions: Sequence[Sequence[int]],
+    n_items: int,
+    config: EclatConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+) -> EclatResult:
+    """Mine all frequent itemsets.  ``mesh`` enables the sharded backend."""
+    spec = VARIANTS[config.variant]
+    t_start = time.perf_counter()
+    stats: dict = {"variant": config.variant, "phase_s": {}}
+
+    n_txn = len(transactions)
+    abs_min_sup = config.resolve_min_sup(n_txn)
+    stats["abs_min_sup"] = abs_min_sup
+
+    # ---- Phase 1 (+2 filtering / +3 accumulator): vertical DB -------------
+    t0 = time.perf_counter()
+    db, info = _build_db(transactions, n_items, abs_min_sup, spec, mesh)
+    stats.update(info)
+    stats["phase_s"]["vertical"] = time.perf_counter() - t0
+    n1, w = db.n_items, db.n_words
+    stats["n_freq_items"] = n1
+    stats["n_words"] = w
+
+    store = ItemsetStore(db.items)
+    # partition table over 1-length-prefix classes (class rank r, r < n1-1)
+    n_classes = max(n1 - 1, 0)
+    sizes1 = (n1 - 1 - np.arange(n_classes)).clip(min=0)
+    est = pair_work(sizes1 + 1, w)  # +1: member count of class r is n1-1-r
+    eff_p = config.p if spec["partitioner"] in ("hash", "reverse_hash", "greedy") else max(n_classes, 1)
+    table = assign_partitions(n_classes, spec["partitioner"], eff_p, work=est)
+    n_dev = mesh.shape["data"] if mesh is not None else 1
+    device_of_partition = (table % max(n_dev, 1)) if spec["partitioner"] == "default" else None
+    # partition -> device round robin
+    part_to_dev = np.arange(eff_p, dtype=np.int64) % max(n_dev, 1)
+
+    lvl1_partition = np.concatenate([table, [table[-1] if n_classes else 0]])[:n1] if n1 else np.zeros(0, np.int64)
+    store.add_level(
+        LevelRecord(
+            k=1,
+            parent=np.full(n1, -1, np.int64),
+            item_rank=np.arange(n1, dtype=np.int64),
+            support=db.supports.astype(np.int64),
+            partition=lvl1_partition,
+        )
+    )
+    if n1 < 2:
+        stats["total_s"] = time.perf_counter() - t_start
+        return EclatResult(store=store, db=db, stats=stats)
+
+    execu = _Executor(config, mesh)
+    bitmaps = jnp.asarray(db.bitmaps)
+    diffsets = config.use_diffsets and config.variant == "v6"
+
+    # ---- Phase 2: triangular matrix (2-itemset counts) --------------------
+    t0 = time.perf_counter()
+    tri = config.tri_matrix
+    if tri is None:
+        tri = n1 <= config.tri_matrix_max_items  # paper's BMS1/BMS2 opt-out
+    stats["tri_matrix"] = bool(tri)
+
+    sup1 = db.supports.astype(np.int32)
+    if tri:
+        counts2 = cooccurrence_counts(bitmaps)
+        iu, ju, sup2 = frequent_pairs(counts2, abs_min_sup)
+        # materialize bitmaps only for the survivors
+        mode = 1 if diffsets else 0
+        out, sup_chk, slots = execu.run(
+            bitmaps, iu.astype(np.int32), ju.astype(np.int32), sup1[iu],
+            part_to_dev[table[iu]] if iu.size else np.zeros(0, np.int64), mode,
+        )
+        lvl_bitmaps = jnp.take(out.reshape(-1, w), jnp.asarray(slots, jnp.int32), axis=0)
+        sup2 = sup_chk
+        keep = sup2 >= abs_min_sup  # all true by construction, keeps code uniform
+        iu, ju, sup2, lvl_bitmaps = iu[keep], ju[keep], sup2[keep], lvl_bitmaps[jnp.asarray(np.nonzero(keep)[0])]
+    else:
+        # chunked all-pairs (the paper's no-tri-matrix path for BMS datasets)
+        iu_all, ju_all = np.triu_indices(n1, k=1)
+        mode = 1 if diffsets else 0
+        keep_i, keep_j, keep_s, keep_bm = [], [], [], []
+        for s in range(0, iu_all.shape[0], config.chunk_pairs):
+            ic = iu_all[s: s + config.chunk_pairs].astype(np.int32)
+            jc = ju_all[s: s + config.chunk_pairs].astype(np.int32)
+            out, sup, slots = execu.run(
+                bitmaps, ic, jc, sup1[ic],
+                part_to_dev[table[ic]] if ic.size else np.zeros(0, np.int64), mode,
+            )
+            m = sup >= abs_min_sup
+            if m.any():
+                keep_i.append(ic[m]); keep_j.append(jc[m]); keep_s.append(sup[m])
+                keep_bm.append(jnp.take(out.reshape(-1, w), jnp.asarray(slots[m], jnp.int32), axis=0))
+        if keep_i:
+            iu = np.concatenate(keep_i).astype(np.int64)
+            ju = np.concatenate(keep_j).astype(np.int64)
+            sup2 = np.concatenate(keep_s)
+            lvl_bitmaps = jnp.concatenate(keep_bm, axis=0)
+        else:
+            iu = ju = np.zeros(0, np.int64); sup2 = np.zeros(0, np.int32)
+            lvl_bitmaps = jnp.zeros((0, w), jnp.uint32)
+    stats["phase_s"]["tri_matrix"] = time.perf_counter() - t0
+
+    parent = iu.copy()
+    item_rank = ju.copy()
+    class_id = iu.copy()
+    partition = table[iu] if iu.size else np.zeros(0, np.int64)
+    support = sup2.astype(np.int64)
+    store.add_level(LevelRecord(k=2, parent=parent, item_rank=item_rank,
+                                support=support, partition=partition))
+
+    # ---- Phase 3/4: level-wise Bottom-Up -----------------------------------
+    t0 = time.perf_counter()
+    k = 2
+    max_k = config.max_k or n1
+    while support.shape[0] and k < max_k:
+        starts, sizes = class_segments(class_id)
+        left, right = segment_pairs(starts, sizes)
+        if left.size == 0:
+            break
+        mode = 2 if diffsets else 0
+        dev = part_to_dev[partition[left]]
+        out, sup, slots = execu.run(
+            lvl_bitmaps, left.astype(np.int32), right.astype(np.int32),
+            support[left].astype(np.int32), dev, mode,
+        )
+        m = sup >= abs_min_sup
+        k += 1
+        if not m.any():
+            break
+        sel = np.nonzero(m)[0]
+        new_bitmaps = jnp.take(out.reshape(-1, w), jnp.asarray(slots[sel], jnp.int32), axis=0)
+        parent = left[sel]
+        item_rank_new = item_rank[right[sel]]
+        class_id_new = left[sel]
+        partition_new = partition[left[sel]]
+        support_new = sup[sel].astype(np.int64)
+        store.add_level(LevelRecord(k=k, parent=parent, item_rank=item_rank_new,
+                                    support=support_new, partition=partition_new))
+        lvl_bitmaps = new_bitmaps
+        item_rank, class_id, partition, support = item_rank_new, class_id_new, partition_new, support_new
+        if config.checkpoint_dir and config.checkpoint_every_level:
+            from .lineage import save_mining_checkpoint
+            save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
+                                   item_rank, partition, support, np.asarray(lvl_bitmaps))
+    stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
+
+    # ---- balance bookkeeping ----------------------------------------------
+    lvl2 = store.levels[1] if len(store.levels) > 1 else None
+    if lvl2 is not None and lvl2.partition.size:
+        work = np.ones_like(lvl2.partition, dtype=np.float64) * w
+        stats["partition_balance"] = {
+            k_: v for k_, v in partition_stats(lvl2.partition, work, eff_p).items() if k_ != "loads"
+        }
+    if execu.device_pair_counts:
+        per_dev = np.sum(execu.device_pair_counts, axis=0)
+        stats["device_balance"] = {
+            "pairs_per_device": per_dev.tolist(),
+            "padding_efficiency": float(per_dev.sum() / (per_dev.max() * per_dev.shape[0]))
+            if per_dev.max() > 0 else 1.0,
+        }
+    stats["n_intersections"] = execu.n_intersections
+    stats["n_padded"] = execu.n_padded
+    stats["total_s"] = time.perf_counter() - t_start
+    return EclatResult(store=store, db=db, stats=stats)

@@ -1,0 +1,7 @@
+"""repro.data — transaction generators (paper datasets) + LM token pipeline."""
+from .lm_pipeline import TokenPipeline
+from .synthetic import (DatasetSpec, PAPER_DATASETS, attribute_table,
+                        clickstream, generate, quest)
+
+__all__ = ["TokenPipeline", "DatasetSpec", "PAPER_DATASETS", "attribute_table",
+           "clickstream", "generate", "quest"]

@@ -1,0 +1,14 @@
+"""repro.kernels — Pallas TPU kernels for the framework's compute hot-spots.
+
+popcount_support : tidset AND + support counting (paper Algorithm-1 inner loop)
+decode_attention : grouped GQA decode over the KV cache (serving hot-spot)
+trimatrix        : 2-itemset triangular-matrix co-occurrence (paper Phase-2)
+flash_attention  : tiled online-softmax attention (LM substrate prefill)
+
+Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (dispatching
+jit wrapper), ref.py (pure-jnp oracle).  Kernels are TPU-target; on this CPU
+container they are validated in interpret mode against the oracles.
+"""
+from . import decode_attention, flash_attention, popcount_support, trimatrix
+
+__all__ = ["decode_attention", "flash_attention", "popcount_support", "trimatrix"]

@@ -1,0 +1,19 @@
+"""Dispatching wrapper: Pallas decode-attention on TPU, jnp oracle on CPU."""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention
+from .ref import decode_attention_ref
+
+
+def grouped_decode_attention(q, k, v, length, *, window=0, sm_scale=None,
+                             interpret: bool | None = None):
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return decode_attention(q, k, v, length, window=window,
+                                    sm_scale=sm_scale)
+        return decode_attention_ref(q, k, v, length, window=window,
+                                    sm_scale=sm_scale)
+    return decode_attention(q, k, v, length, window=window, sm_scale=sm_scale,
+                            interpret=interpret)

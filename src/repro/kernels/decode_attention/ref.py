@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for grouped decode attention (mirrors
+repro.models.attention._decode_attend semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length, *, window=0, sm_scale=None):
+    """q: (B, KV, G, D); k/v: (B, S, KV, D); length: (B,) -> (B, KV, G, D)."""
+    b, kv, g, d = q.shape
+    s = k.shape[1]
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+    scores = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * sm_scale
+    cols = jnp.arange(s)[None, :]
+    mask = cols < length[:, None]
+    if window:
+        mask &= cols > (length[:, None] - 1 - window)
+    scores = jnp.where(mask[:, None, None, :], scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32)).astype(q.dtype)

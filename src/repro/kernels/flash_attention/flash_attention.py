@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled online-softmax (flash) attention.
+
+Used by the LM substrate's prefill path (the framework's dominant compute
+hot-spot at the 32k prefill shape).  Standard FlashAttention-2 style tiling
+adapted to TPU: the KV sequence is the innermost sequential grid dimension;
+running max / normalizer / accumulator tiles live in VMEM scratch so each
+(bq, d) output block is written once.
+
+Supports causal masking, sliding-window masking (windowed archs: gemma3's
+local layers, hymba), and GQA via the K/V BlockSpec index map (no KV
+repetition in HBM — the map folds q-head -> kv-head).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 256
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            sm_scale, causal, window, block_q, block_k, seq_len):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = cols < seq_len                         # padding mask
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                           # (bq, 1)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    sm_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D) with H % Hkv == 0 -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    _, hkv, sk, dk = k.shape
+    if sk != s or dk != d or v.shape != k.shape or h % hkv:
+        raise ValueError(f"bad shapes q={q.shape} k={k.shape} v={v.shape}")
+    group = h // hkv
+    if sm_scale is None:
+        sm_scale = d ** -0.5
+
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    pad_s = (-s) % max(bq, bk)
+    if pad_s:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_s), (0, 0)))
+    sp = q.shape[2]
+    grid = (b, h, sp // bq, sp // bk)
+
+    kernel = functools.partial(
+        _kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, seq_len=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :s, :]

@@ -1,0 +1,24 @@
+"""Dispatching wrapper: Pallas flash attention on TPU, jnp oracle on CPU.
+
+``repro.models.attention`` routes full-sequence (prefill/train) attention
+through here; decode-shape attention (q_len == 1) is linear in KV length and
+stays in plain jnp (no kernel needed — see DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def multi_head_attention(q, k, v, *, causal=True, window=None, sm_scale=None,
+                         interpret: bool | None = None):
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   sm_scale=sm_scale)
+        return attention_ref(q, k, v, causal=causal, window=window,
+                             sm_scale=sm_scale)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           sm_scale=sm_scale, interpret=interpret)

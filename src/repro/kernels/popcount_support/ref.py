@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the popcount_support kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def popcount_support_ref(a: jax.Array, b: jax.Array):
+    """(M, W) uint32 x2 -> ((M, W) intersection, (M,) int32 support)."""
+    inter = jnp.bitwise_and(a, b)
+    sup = jax.lax.population_count(inter).astype(jnp.int32).sum(axis=-1)
+    return inter, sup

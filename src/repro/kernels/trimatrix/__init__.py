@@ -1,0 +1,5 @@
+from .ops import cooccurrence
+from .trimatrix import trimatrix
+from .ref import trimatrix_ref, cooccurrence_mxu_ref
+
+__all__ = ["cooccurrence", "trimatrix", "trimatrix_ref", "cooccurrence_mxu_ref"]

@@ -1,0 +1,17 @@
+"""Dispatching wrapper for the trimatrix kernel (TPU) / blocked jnp (CPU)."""
+from __future__ import annotations
+
+import jax
+
+from .trimatrix import trimatrix
+from .ref import trimatrix_ref
+
+
+def cooccurrence(bitmaps: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        if jax.default_backend() == "tpu":
+            return trimatrix(bitmaps)
+        # CPU path: repro.core.triangular's blocked jnp version is used by the
+        # driver directly; this fallback exists for API completeness.
+        return trimatrix_ref(bitmaps)
+    return trimatrix(bitmaps, interpret=interpret)

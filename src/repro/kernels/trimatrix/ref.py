@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the trimatrix kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def trimatrix_ref(bitmaps: jax.Array) -> jax.Array:
+    """(N, W) uint32 -> (N, N) int32 popcount co-occurrence (packed form)."""
+    inter = jnp.bitwise_and(bitmaps[:, None, :], bitmaps[None, :, :])
+    return jax.lax.population_count(inter).astype(jnp.int32).sum(axis=-1)
+
+
+def cooccurrence_mxu_ref(bitmaps: jax.Array, n_txn: int) -> jax.Array:
+    """The MXU alternative: unpack bits to {0,1} and use a real matmul.
+
+    C = D @ D.T with D the (N, n_txn) dense indicator — numerically identical,
+    32x more bytes moved per word but systolic-array compute.  Which path wins
+    on TPU depends on W vs the MXU's effective throughput; both are exposed so
+    the benchmark can make the call per dataset.
+    """
+    n, w = bitmaps.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (bitmaps[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    dense = bits.reshape(n, w * 32)[:, :n_txn].astype(jnp.float32)
+    return (dense @ dense.T).astype(jnp.int32)

@@ -1,0 +1,9 @@
+"""repro.launch — mesh construction, dry-run, train/serve/mine drivers.
+
+NOTE: dryrun must be executed as a module entry point
+(``python -m repro.launch.dryrun``) so its XLA_FLAGS lines run before any
+jax import; do not import it from here.
+"""
+from .mesh import make_mesh_named, make_production_mesh
+
+__all__ = ["make_mesh_named", "make_production_mesh"]

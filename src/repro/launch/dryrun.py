@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST precede any jax import (jax locks the device count
+# at first init).  Everything below is ordinary.
+"""Multi-pod dry-run driver.
+
+For one (arch x shape x mesh) cell:
+  1. build the production step (specs.build_cell) with explicit shardings,
+  2. jit(...).lower(*abstract_args).compile()  — THE deliverable,
+  3. record memory_analysis / cost_analysis / collective schedule,
+  4. scan-calibrate FLOP/byte/collective totals (analysis.roofline),
+  5. write reports/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..analysis.roofline import (CellReport, calibration_patterns,
+                                 measure_compiled, model_flops,
+                                 roofline_terms)
+from ..configs import SHAPES, get_config, list_configs
+from ..dist.sharding import set_mesh
+from .mesh import make_mesh_named
+from .specs import build_cell, cell_skip_reason
+
+REPORT_DIR = "reports/dryrun"
+
+
+def lower_and_compile(cell):
+    jitted = jax.jit(
+        cell.fn,
+        in_shardings=cell.in_shardings,
+        out_shardings=cell.out_shardings,
+        donate_argnums=cell.donate_argnums,
+    )
+    t0 = time.perf_counter()
+    lowered = jitted.lower(*cell.args)
+    compiled = lowered.compile()
+    return lowered, compiled, time.perf_counter() - t0
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             calibrate: bool = True, verbose: bool = True) -> dict:
+    skip = cell_skip_reason(arch, shape_name)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    mesh = make_mesh_named(mesh_name)
+    n_dev = mesh.size
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+
+    with mesh:
+        cell = build_cell(arch, shape_name, mesh)
+        lowered, compiled, compile_s = lower_and_compile(cell)
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in ("flops", "bytes accessed") if k in ca})
+        flops_raw, bytes_raw, coll_raw, memory = measure_compiled(compiled, n_dev)
+
+        flops, nbytes, wire = flops_raw, bytes_raw, coll_raw.total_wire_bytes
+        coll_counts = dict(coll_raw.count)
+        coll_bytes = dict(coll_raw.bytes_wire)
+        calibrated = False
+        if calibrate:
+            try:
+                flops, nbytes, wire, coll_counts, coll_bytes = _calibrate(
+                    arch, shape_name, mesh, n_dev,
+                    flops_raw, bytes_raw, coll_raw)
+                calibrated = True
+            except Exception:
+                traceback.print_exc()
+
+    terms = roofline_terms(flops, nbytes, wire)
+    mf = model_flops(cfg, shp)
+    report = CellReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, kind=shp.kind,
+        n_devices=n_dev,
+        flops_per_device=flops, bytes_per_device=nbytes,
+        wire_bytes_per_device=wire,
+        collective_counts=coll_counts, collective_bytes=coll_bytes,
+        memory=memory, terms=terms,
+        model_flops_total=mf,
+        hlo_model_ratio=(flops * n_dev) / mf if mf else 0.0,
+        compile_s=compile_s, calibrated=calibrated,
+    )
+    out = report.to_dict()
+    out["status"] = "ok"
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compile={compile_s:.1f}s "
+              f"peak={memory['peak_gb']:.2f}GB/dev "
+              f"terms(ms): C={terms.compute_s*1e3:.2f} M={terms.memory_s*1e3:.2f} "
+              f"X={terms.collective_s*1e3:.2f} dom={terms.dominant} "
+              f"HLO/MODEL={out['hlo_model_ratio']:.2f}")
+    return out
+
+
+def _calibrate(arch, shape_name, mesh, n_dev, flops_full, bytes_full, coll_full):
+    """Per-kind depth-delta calibration (see analysis.roofline docstring).
+
+    Calibration compiles run under cost mode (inner chunk scans widened to a
+    single iteration so HloCostAnalysis sees every op) with microbatches=1
+    (FLOPs are batch-linear; the deliverable full compile keeps production
+    microbatching for the memory picture)."""
+    from ..analysis.hlo_parse import parse_collectives
+    from ..configs import TrainConfig
+    from ..models.costing import costing
+    cfg = get_config(arch)
+    base_pat, variants, counts = calibration_patterns(cfg)
+    cal_tcfg = TrainConfig(microbatches=1, remat="dots")
+
+    def measure(pattern, cost: bool, enc_layers=None):
+        c = dataclasses.replace(
+            cfg, pattern_override=tuple(pattern),
+            n_layers=len(pattern),
+            n_encoder_layers=enc_layers if enc_layers is not None
+            else cfg.n_encoder_layers)
+        with costing(widen_chunks=cost, unroll=True):
+            cell = build_cell(arch, shape_name, mesh, cfg_override=c,
+                              tcfg=cal_tcfg)
+            _, compiled, _ = lower_and_compile(cell)
+        f, b, coll, _ = measure_compiled(compiled, n_dev)
+        return f, b, coll
+
+    # Pass A (cost mode): exact FLOPs — inner chunk scans widened so every op
+    # is visible.  Pass B (production mode): bytes + the real collective
+    # schedule (cost mode's materialized attention makes GSPMD insert
+    # partial-sum all-reduces the chunked program never issues).
+    enc_base = 1 if cfg.n_encoder_layers else None
+    fA0, _, _ = measure(base_pat, True, enc_layers=enc_base)
+    _, b0, c0 = measure(base_pat, False, enc_layers=enc_base)
+    flops = fA0
+    nbytes = b0
+    wire = c0.total_wire_bytes
+    coll_counts = dict(c0.count)
+    coll_bytes = dict(c0.bytes_wire)
+
+    def add_delta(fA1, b1, c1, extra):
+        nonlocal flops, nbytes, wire
+        flops += (fA1 - fA0) * extra
+        nbytes += (b1 - b0) * extra
+        wire += (c1.total_wire_bytes - c0.total_wire_bytes) * extra
+        for k in set(c1.bytes_wire) | set(c0.bytes_wire):
+            d = c1.bytes_wire.get(k, 0.0) - c0.bytes_wire.get(k, 0.0)
+            coll_bytes[k] = coll_bytes.get(k, 0.0) + d * extra
+        for k in set(c1.count) | set(c0.count):
+            d = c1.count.get(k, 0) - c0.count.get(k, 0)
+            coll_counts[k] = coll_counts.get(k, 0) + d * extra
+
+    for kind, pat in variants.items():
+        extra = counts[kind] - 1
+        if extra <= 0:
+            continue
+        fA1, _, _ = measure(pat, True, enc_layers=enc_base)
+        _, b1, c1 = measure(pat, False, enc_layers=enc_base)
+        add_delta(fA1, b1, c1, extra)
+    if cfg.n_encoder_layers and cfg.n_encoder_layers > 1:
+        fA1, _, _ = measure(base_pat, True, enc_layers=2)
+        _, b1, c1 = measure(base_pat, False, enc_layers=2)
+        add_delta(fA1, b1, c1, cfg.n_encoder_layers - 1)
+    return flops, nbytes, wire, coll_counts, coll_bytes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--out-dir", default=REPORT_DIR)
+    args = ap.parse_args(argv)
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}__{shape}__{mesh_name}"
+                path = os.path.join(args.out_dir, key + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {key}")
+                    continue
+                try:
+                    rep = run_cell(arch, shape, mesh_name,
+                                   calibrate=not args.no_calibrate)
+                except Exception as e:
+                    traceback.print_exc()
+                    rep = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": repr(e)}
+                    failures.append(key)
+                with open(path, "w") as f:
+                    json.dump(rep, f, indent=1)
+    if failures:
+        print("FAILURES:", failures, file=sys.stderr)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production meshes.
+
+Kept as FUNCTIONS so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialization).
+
+Single pod: (data=16, model=16) — 256 chips (v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; gradients reduce over
+(pod, data), the pod axis proves cross-pod sharding lowers.
+A deeper `pipeline` axis can be requested for >2-pod topologies.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_named", "SINGLE_POD", "MULTI_POD"]
+
+SINGLE_POD = ((16, 16), ("data", "model"))
+MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_named(name: str) -> jax.sharding.Mesh:
+    if name in ("single", "single_pod", "16x16"):
+        return make_production_mesh(multi_pod=False)
+    if name in ("multi", "multi_pod", "2x16x16"):
+        return make_production_mesh(multi_pod=True)
+    if name == "tiny":   # tests: 4 host devices
+        return jax.make_mesh((2, 2), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    if name == "pipeline":  # optional deeper topology (not an assigned mesh)
+        return jax.make_mesh((2, 2, 8, 16), ("pipe", "pod", "data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 4)
+    raise ValueError(f"unknown mesh {name!r}")

@@ -1,0 +1,236 @@
+"""Dry-run cell builder: (arch x shape x mesh) -> (step fn, abstract args,
+shardings).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, zero allocation — and ``build_cell`` assembles
+the jit-able step with explicit in/out shardings so ``.lower().compile()``
+exercises exactly the production distribution plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, TrainConfig, get_config
+from ..dist.sharding import batch_spec, dp_axes, set_mesh, spec_tree
+from ..models import Model, init_params
+from ..training.optimizer import adamw_init, zero1_spec_tree
+from ..training.train_step import make_train_step
+
+__all__ = ["input_specs", "build_cell", "cache_spec_tree", "cell_skip_reason"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    cfg = get_config(arch)
+    for name, reason in cfg.skip_shapes:
+        if name == shape_name:
+            return reason
+    return None
+
+
+def _model_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, SDS]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    dt = _model_dtype(cfg)
+    if shp.kind == "decode":
+        out = {"tokens": SDS((b, 1), jnp.int32), "pos": SDS((b,), jnp.int32)}
+    else:
+        out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.n_encoder_layers:
+        out["enc_embeds"] = SDS((b, cfg.encoder_len, cfg.d_model), dt)
+    if cfg.frontend == "vision" and shp.kind != "decode":
+        out["img_embeds"] = SDS((b, cfg.frontend_len, cfg.d_model), dt)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cache sharding
+# ---------------------------------------------------------------------------
+
+def cache_spec_tree(cache_shapes, mesh: Mesh, batch: int):
+    """Cache sharding rules.
+
+    KV leaves (.../k, .../v of shape (L, B, S, KV, hd)): head_dim over
+    'model' — this matches the layout attention produces, so prefill's cache
+    write is layout-local (no involuntary reshard); B==1 (long-context)
+    additionally shards the sequence over 'data' so the idle batch axis
+    still splits the KV bytes.  Recurrent-state leaves: batch over dp when
+    divisible, then the largest dim that divides 'model'."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    m_size = mesh.shape.get("model", 1)
+    d_size = mesh.shape.get("data", 1)
+    batch_ok = batch % dp_size == 0
+
+    def spec(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1]))
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if len(shape) >= 2 and batch_ok and shape[1] == batch:
+            entries[1] = dp if len(dp) > 1 else dp[0]
+        if name in ("k", "v") and len(shape) == 5:
+            if shape[4] % m_size == 0:
+                entries[4] = "model"
+            if not batch_ok and shape[2] % d_size == 0:
+                entries[2] = "data"
+            return P(*entries)
+        cand = sorted(range(2, len(shape)), key=lambda i: -shape[i])
+        for i in cand:
+            if not batch_ok and shape[i] % (dp_size * m_size) == 0:
+                entries[i] = tuple(list(dp) + ["model"])
+                break
+            if shape[i] % m_size == 0 and shape[i] >= m_size:
+                entries[i] = "model"
+                break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# cell assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    kind: str
+    fn: Any                 # jit-able python callable
+    args: Tuple             # abstract args (ShapeDtypeStructs)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: Dict[str, Any]
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               cfg_override=None, tcfg: Optional[TrainConfig] = None) -> Cell:
+    cfg = cfg_override or get_config(arch)
+    shp = SHAPES[shape_name]
+    model = Model(cfg)
+    set_mesh(mesh)
+    # dry-run default: 8 microbatches + dots remat — the baseline activation-
+    # memory posture at global_batch 256 (per-arch tuning happens in §Perf)
+    tcfg = tcfg or TrainConfig(microbatches=8, remat="dots")
+    dt = _model_dtype(cfg)
+    b, s = shp.global_batch, shp.seq_len
+
+    params_shape = jax.eval_shape(
+        functools.partial(init_params, cfg=cfg), jax.random.PRNGKey(0))
+    pspecs = spec_tree(params_shape, mesh, cfg.expert_sharding,
+                       getattr(cfg, "mlp_dp", False))
+    pshard = _named(mesh, pspecs)
+
+    batch_sds = input_specs(arch, shape_name)
+    if cfg_override is not None:  # calibration variants keep full-size inputs
+        pass
+    bspec = batch_spec(b, mesh)
+    bshard = {k: NamedSharding(mesh, P(*([bspec[0]] + [None] * (len(v.shape) - 1))))
+              for k, v in batch_sds.items()}
+    repl = NamedSharding(mesh, P())
+
+    if shp.kind == "train":
+        mdt = jnp.bfloat16 if getattr(tcfg, "opt_dtype", "float32") == "bfloat16" else jnp.float32
+        opt_shape = jax.eval_shape(
+            functools.partial(adamw_init, moment_dtype=mdt), params_shape)
+        widen = zero1_spec_tree(pspecs, mesh) if tcfg.zero1 else (lambda sp, shape: sp)
+        mu_specs = jax.tree.map(
+            lambda sp, leaf: widen(sp, leaf.shape), pspecs, params_shape)
+        opt_specs = {"mu": mu_specs, "nu": mu_specs, "step": P()}
+        oshard = _named(mesh, opt_specs)
+        step = make_train_step(model, tcfg)
+        metrics_shard = repl
+        return Cell(
+            arch=arch, shape_name=shape_name, kind="train",
+            fn=step,
+            args=(params_shape, opt_shape, batch_sds),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, metrics_shard),
+            donate_argnums=(0, 1),
+            meta={"tokens": b * s},
+        )
+
+    if shp.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, s_max=s)
+
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(b, s, dt))
+        cspecs = cache_spec_tree(cache_shape, mesh, b)
+        cshard = _named(mesh, cspecs)
+        v_ax = "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None
+        logits_shard = NamedSharding(mesh, P(bspec[0], None, v_ax))
+        return Cell(
+            arch=arch, shape_name=shape_name, kind="prefill",
+            fn=prefill_step,
+            args=(params_shape, batch_sds),
+            in_shardings=(pshard, bshard),
+            out_shardings=(logits_shard, cshard),
+            donate_argnums=(),
+            meta={"tokens": b * s},
+        )
+
+    # decode
+    cache_shape = jax.eval_shape(lambda: model.init_cache(b, s, dt))
+    cspecs = cache_spec_tree(cache_shape, mesh, b)
+    cshard = _named(mesh, cspecs)
+    tok_sds = batch_sds["tokens"]
+    pos_sds = batch_sds["pos"]
+    tokshard = bshard["tokens"]
+    posshard = bshard["pos"]
+    v_ax = "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 else None
+    logits_shard = NamedSharding(mesh, P(bspec[0], None, v_ax))
+
+    if cfg.n_encoder_layers:
+        enc_out_sds = SDS((b, cfg.encoder_len, cfg.d_model), dt)
+        xkv_shape = jax.eval_shape(
+            lambda p, e: model.cross_kv(p, e), params_shape, enc_out_sds)
+        xkv_specs = jax.tree.map(
+            lambda leaf: P(None, bspec[0], None, None, None), xkv_shape)
+        xkvshard = _named(mesh, xkv_specs)
+
+        def serve_step(params, cache, token, pos, enc_kv):
+            return model.decode_step(params, token, cache, pos, enc_out=enc_kv)
+
+        return Cell(
+            arch=arch, shape_name=shape_name, kind="decode",
+            fn=serve_step,
+            args=(params_shape, cache_shape, tok_sds, pos_sds, xkv_shape),
+            in_shardings=(pshard, cshard, tokshard, posshard, xkvshard),
+            out_shardings=(logits_shard, cshard),
+            donate_argnums=(1,),
+            meta={"tokens": b},
+        )
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    return Cell(
+        arch=arch, shape_name=shape_name, kind="decode",
+        fn=serve_step,
+        args=(params_shape, cache_shape, tok_sds, pos_sds),
+        in_shardings=(pshard, cshard, tokshard, posshard),
+        out_shardings=(logits_shard, cshard),
+        donate_argnums=(1,),
+        meta={"tokens": b},
+    )

@@ -1,0 +1,4 @@
+"""repro.models — LM substrate for the 10 assigned architectures."""
+from .transformer import Model, init_params, stages_meta
+
+__all__ = ["Model", "init_params", "stages_meta"]

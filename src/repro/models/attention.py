@@ -1,0 +1,219 @@
+"""Attention: GQA/MQA, global / sliding-window, train/prefill + decode paths.
+
+Full-sequence attention runs through a memory-bounded chunked online-softmax
+(q-chunks outer scan, k-chunks inner scan) so the 32k prefill never
+materializes an (S, S) score matrix — the pure-XLA equivalent of the
+``repro.kernels.flash_attention`` Pallas kernel, which ``ops.py`` dispatches
+to on real TPU.  Decode attends one query against the KV cache in grouped
+(B, KV, G, S) form so GQA never repeats KV in memory, and a sequence-sharded
+cache reduces over the 'model' axis (GSPMD inserts the all-reduce).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import constrain, dp_axes
+from .layers import apply_rope, rope, softcap
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype, stacked: int = 0, cross: bool = False) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    shp = (lambda *s: (stacked, *s)) if stacked else (lambda *s: s)
+    pre = "stk_" if stacked else ""
+    scale = d ** -0.5
+    p = {
+        pre + ("xwq" if cross else "wq"): jax.random.normal(ks[0], shp(d, h * hd), dtype) * scale,
+        pre + ("xwk" if cross else "wk"): jax.random.normal(ks[1], shp(d, kv * hd), dtype) * scale,
+        pre + ("xwv" if cross else "wv"): jax.random.normal(ks[2], shp(d, kv * hd), dtype) * scale,
+        pre + ("xwo" if cross else "wo"): jax.random.normal(ks[3], shp(h * hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    return p
+
+
+def _split_heads(x, n, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def flash_chunked(q, k, v, *, causal: bool, window: int, sm_scale: float,
+                  softcap_val: float = 0.0, q_chunk: int = 1024, k_chunk: int = 1024):
+    """(B, S, H, D) x (B, S, KV, D)^2 -> (B, S, H, D); online softmax, fp32 accum.
+
+    Never materializes more than (B, H, q_chunk, k_chunk) scores.
+    """
+    from .costing import cost_mode
+    b, s, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    if cost_mode():
+        q_chunk = k_chunk = max(s, sk)
+    qc = min(q_chunk, s)
+    kc = min(k_chunk, sk)
+    pad_q = (-s) % qc
+    pad_k = (-sk) % kc
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sp = q.shape[1]
+    skp = k.shape[1]
+    nq, nk = sp // qc, skp // kc
+    # (B, KV, G, nq, qc, D) grouped query blocks
+    qg = q.reshape(b, nq, qc, kvh, g, d).transpose(1, 0, 3, 4, 2, 5)
+    kg = k.reshape(b, nk, kc, kvh, d).transpose(1, 0, 3, 2, 4)
+    vg = v.reshape(b, nk, kc, kvh, d).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk  # qblk: (B, KV, G, qc, D)
+        rows = qi * qc + jnp.arange(qc)
+
+        def k_step(carry, ki_kv):
+            m_prev, l_prev, acc = carry
+            ki, kblk, vblk = ki_kv  # (B, KV, kc, D)
+            scores = jnp.einsum(
+                "bkgqd,bkcd->bkgqc", qblk.astype(jnp.float32),
+                kblk.astype(jnp.float32)) * sm_scale
+            if softcap_val:
+                scores = softcap(scores, softcap_val)
+            cols = ki * kc + jnp.arange(kc)
+            mask = (cols[None, :] < sk)
+            if causal:
+                mask = mask & (cols[None, :] <= rows[:, None])
+            if window:
+                mask = mask & (cols[None, :] > rows[:, None] - window)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(m_prev, scores.max(-1))
+            p = jnp.exp(scores - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = l_prev * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum("bkgqc,bkcd->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        init = (
+            jnp.full((b, kvh, g, qc), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, qc), jnp.float32),
+            jnp.zeros((b, kvh, g, qc, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(k_step, init, (jnp.arange(nk), kg, vg))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qg))
+    # outs: (nq, B, KV, G, qc, D) -> (B, S, H, D)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, sp, h, d)
+    return out[:, :s]
+
+
+def attention(p: dict, x: jax.Array, cfg, *, window: int = 0,
+              cache: Optional[dict] = None, pos: Optional[jax.Array] = None,
+              cross_kv: Optional[tuple] = None, causal: bool = True,
+              prefix: str = ""):
+    """Unified attention layer.
+
+    cache: {"k": (B, S_max, KV, D), "v": ..., } with ``pos`` the current
+    decode position -> returns (out, new_cache).  Without cache: full-seq.
+    cross_kv: precomputed (k, v) for encoder-decoder cross attention.
+    """
+    b, s, d_model = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dp = dp_axes()
+    wq, wk, wv, wo = (p[prefix + "wq"], p[prefix + "wk"], p[prefix + "wv"], p[prefix + "wo"])
+    if wq.ndim == 3:  # stacked leaf sliced by scan — shouldn't happen here
+        raise ValueError("stacked params must be sliced before attention()")
+
+    q = _split_heads(x @ wq, h, hd)
+    if cross_kv is None:
+        k = _split_heads(x @ wk, kv, hd)
+        v = _split_heads(x @ wv, kv, hd)
+        if cfg.rope_theta:
+            if pos is None:
+                positions = jnp.arange(s)
+                cos, sin = rope(positions, hd, cfg.rope_theta)
+            else:
+                positions = pos[:, None] + jnp.arange(s)[None]  # (B, S)
+                cos, sin = rope(positions, hd, cfg.rope_theta)
+            q = apply_rope(q, cos, sin)
+            k = apply_rope(k, cos, sin)
+    else:
+        k, v = cross_kv
+
+    q = constrain(q, P(dp, None, "model", None))
+    sm_scale = hd ** -0.5
+
+    if cache is not None and cross_kv is None:
+        # append path: write k,v at pos, then attend (decode: over the cache;
+        # prefill s>1: within the prompt via the chunked flash path)
+        # align the fresh k/v with the cache layout (head_dim over 'model';
+        # B==1 long-context shards the sequence over 'data') so the
+        # dynamic-update-slice is layout-local instead of an involuntary
+        # full reshard (see launch.specs.cache_spec_tree).
+        kv_spec = (P(dp, None, None, "model") if b > 1
+                   else P(None, "data", None, "model"))
+        k = constrain(k.astype(cache["k"].dtype), kv_spec)
+        v = constrain(v.astype(cache["v"].dtype), kv_spec)
+        idx = pos[0] if pos is not None else 0
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, idx, axis=1)
+        if s == 1:
+            out = _decode_attend(q, ck, cv, idx + s, sm_scale, window, cfg.attn_logit_softcap)
+        else:
+            out = flash_chunked(q, k, v, causal=causal, window=window,
+                                sm_scale=sm_scale, softcap_val=cfg.attn_logit_softcap)
+        out = out.reshape(b, s, h * hd) @ wo
+        return out, {"k": ck, "v": cv}
+
+    if cache is None and cross_kv is not None:
+        out = _decode_attend(q, k, v, k.shape[1], sm_scale, 0, cfg.attn_logit_softcap) \
+            if s == 1 else flash_chunked(q, k, v, causal=False, window=0, sm_scale=sm_scale,
+                                         softcap_val=cfg.attn_logit_softcap)
+        return out.reshape(b, s, h * hd) @ wo, None
+
+    out = flash_chunked(q, k, v, causal=causal, window=window, sm_scale=sm_scale,
+                        softcap_val=cfg.attn_logit_softcap)
+    out = constrain(out, P(dp, None, "model", None))
+    return out.reshape(b, s, h * hd) @ wo, None
+
+
+def _decode_attend(q, ck, cv, length, sm_scale, window, cap):
+    """q: (B, 1, H, D); cache: (B, S_max, KV, D).  Grouped GQA, linear in S.
+
+    The cache stays in its storage dtype (bf16) and sharding (head_dim over
+    'model'); q is constrained to the same head_dim sharding so the score
+    contraction lowers to a local partial product + a small all-reduce of
+    (B, KV, G, 1, S) scores — never an all-gather of the multi-GB cache.
+    """
+    b, s, h, hd = q.shape
+    kvh = ck.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    qg = constrain(qg, P(dp_axes(), None, None, None, "model"))
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck,
+                        preferred_element_type=jnp.float32) * sm_scale
+    if cap:
+        scores = softcap(scores, cap)
+    col = jnp.arange(ck.shape[1])
+    mask = col[None, :] < length
+    if window:
+        mask = mask & (col[None, :] > length - 1 - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(cv.dtype), cv,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def init_cache(cfg, batch: int, s_max: int, n_layers: int, dtype=jnp.bfloat16):
+    """Stacked KV cache for one stage of ``n_layers`` attention layers."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (n_layers, batch, s_max, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,41 @@
+"""Cost-mode switches for scan-exact HLO accounting.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count, which hides (a) per-layer cost inside scanned stages and (b) chunked
+inner loops (flash q/k chunks, xent chunks, SSM/mLSTM chunks).  The dry-run
+calibration therefore compiles tiny depth variants with:
+
+  unroll_stages — stage scans become python loops (per-layer deltas visible);
+  widen_chunks  — inner chunk sizes widen to the full extent (single-iteration
+                  scans -> straight-line HLO, exact op counts).
+
+Pass A (FLOPs) uses both; pass B (bytes/collectives) unrolls stages but keeps
+production chunking so GSPMD sees the real program.  The deliverable full
+compile uses neither.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_WIDEN = False
+_UNROLL = False
+
+
+def cost_mode() -> bool:
+    """True when inner chunk scans should widen to a single iteration."""
+    return _WIDEN
+
+
+def unroll_stages() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def costing(widen_chunks: bool = True, unroll: bool = True):
+    global _WIDEN, _UNROLL
+    prev = (_WIDEN, _UNROLL)
+    _WIDEN, _UNROLL = widen_chunks, unroll
+    try:
+        yield
+    finally:
+        _WIDEN, _UNROLL = prev

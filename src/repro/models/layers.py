@@ -1,0 +1,69 @@
+"""Shared model layers: norms, rotary embeddings, embedding/unembedding."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["rms_norm", "layer_norm", "norm", "rope", "apply_rope", "init_norm",
+           "softcap"]
+
+
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    return layer_norm(p, x) if kind == "layernorm" else rms_norm(p, x)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-style logit soft-capping."""
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def rope(positions: jax.Array, head_dim: int, theta: float) -> tuple:
+    """Rotary cos/sin tables for integer positions (..., S)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, half) or (S, half)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)

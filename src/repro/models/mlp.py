@@ -1,0 +1,41 @@
+"""Dense MLP blocks: SwiGLU / GeGLU / GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import constrain, dp_axes
+
+
+def init_mlp(key, cfg, dtype, stacked: int = 0) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    shp = (lambda *s: (stacked, *s)) if stacked else (lambda *s: s)
+    pre = "stk_" if stacked else ""
+    p = {}
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        p[pre + "w_gate"] = jax.random.normal(ks[0], shp(d, f), dtype) * d ** -0.5
+    p[pre + "w_up"] = jax.random.normal(ks[1], shp(d, f), dtype) * d ** -0.5
+    p[pre + "w_down"] = jax.random.normal(ks[2], shp(f, d), dtype) * f ** -0.5
+    return p
+
+
+def mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    act = cfg.mlp_act
+    up = x @ p["w_up"]
+    if getattr(cfg, "mlp_dp", False) and up.ndim == 3 and up.shape[1] > 1:
+        # mlp_dp: FFN weights replicated over 'model'; activations stay
+        # sequence-sharded -> the whole FFN is collective-free in fwd/bwd-dx
+        up = constrain(up, P(dp_axes(), "model", None))
+    else:
+        up = constrain(up, P(dp_axes(), None, "model"))
+    if act == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        hidden = gate * up
+    elif act == "geglu":
+        gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+        hidden = gate * up
+    else:
+        hidden = jax.nn.gelu(up, approximate=True)
+    return hidden @ p["w_down"]

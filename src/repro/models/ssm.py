@@ -1,0 +1,128 @@
+"""Mamba-style selective SSM block (hymba's parallel-head SSM branch).
+
+Chunked scan: the sequence is processed in fixed chunks with an associative
+scan inside each chunk and a sequential carry between chunks, so the largest
+intermediate is (B, chunk, D_in, N) rather than (B, S, D_in, N) — the
+memory-hierarchy adaptation that replaces the CUDA selective-scan kernel on
+TPU (DESIGN.md §2: recompute-friendly, remat composes over chunks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import constrain, dp_axes
+
+CHUNK = 128
+
+
+def init_ssm(key, cfg, dtype, stacked: int = 0, prefix: str = "") -> dict:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 6)
+    shp = (lambda *s: (stacked, *s)) if stacked else (lambda *s: s)
+    pre = ("stk_" if stacked else "") + prefix
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (din, n)))
+    if stacked:
+        a_init = jnp.broadcast_to(a_init[None], (stacked, din, n))
+    return {
+        pre + "ssm_in_proj": jax.random.normal(ks[0], shp(d, 2 * din), dtype) * d ** -0.5,
+        pre + "ssm_bc_proj": jax.random.normal(ks[1], shp(din, 2 * n + 1), dtype) * din ** -0.5,
+        pre + "ssm_conv": jax.random.normal(ks[2], shp(cfg.ssm_conv, din), dtype) * 0.3,
+        pre + "ssm_a_log": a_init,
+        pre + "ssm_d": jnp.ones(shp(din), jnp.float32),
+        pre + "ssm_out_proj": jax.random.normal(ks[5], shp(din, d), dtype) * din ** -0.5,
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """x: (B, S, Din); w: (K, Din) depthwise causal conv.
+
+    state: (B, K-1, Din) trailing inputs from the previous step (decode).
+    Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+K-1, Din)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((x.shape[0], 0, x.shape[2]), x.dtype)
+    return y, new_state
+
+
+def ssm_block(p: dict, x: jax.Array, cfg, *, state: dict | None = None,
+              prefix: str = ""):
+    """x: (B, S, D) -> (B, S, D).  state={"h": (B, Din, N), "conv": (B, K-1, Din)}
+    enables stateful decode; returns (out, new_state)."""
+    b, s, d = x.shape
+    din = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    g = lambda name: p[prefix + name]
+    dp = dp_axes()
+
+    xz = x @ g("ssm_in_proj")                          # (B, S, 2*Din)
+    xz = constrain(xz, P(dp, None, "model"))
+    xs, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    xs, new_conv = _causal_conv(xs, g("ssm_conv"), conv_state)
+    xs = jax.nn.silu(xs)
+
+    bcd = xs @ g("ssm_bc_proj")                        # (B, S, 2N+1)
+    b_t = bcd[..., :n].astype(jnp.float32)             # (B, S, N)
+    c_t = bcd[..., n: 2 * n].astype(jnp.float32)
+    dt = jax.nn.softplus(bcd[..., -1:].astype(jnp.float32))  # (B, S, 1)
+    a = -jnp.exp(g("ssm_a_log"))                       # (Din, N)
+
+    decay = jnp.exp(dt[..., None] * a[None, None])     # (B, S, Din, N)
+    drive = (dt * xs.astype(jnp.float32))[..., None] * b_t[:, :, None, :]  # (B,S,Din,N)
+
+    h0 = state["h"].astype(jnp.float32) if state is not None else jnp.zeros((b, din, n), jnp.float32)
+
+    if s == 1:
+        h = decay[:, 0] * h0 + drive[:, 0]
+        y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0])[:, None]
+        h_last = h
+    else:
+        from .costing import cost_mode
+        chunk = s if cost_mode() else min(CHUNK, s)
+        pad = (-s) % chunk
+        if pad:
+            decay = jnp.pad(decay, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+            drive = jnp.pad(drive, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+        sp = decay.shape[1]
+        nc = sp // chunk
+        decay_c = decay.reshape(b, nc, chunk, din, n).transpose(1, 0, 2, 3, 4)
+        drive_c = drive.reshape(b, nc, chunk, din, n).transpose(1, 0, 2, 3, 4)
+        ct_c = c_t.reshape(b, nc, chunk, n).transpose(1, 0, 2, 3)
+
+        def chunk_step(h_in, xs_c):
+            dc, dr, cc = xs_c                           # (B, chunk, Din, N)
+            def combine(l, r):
+                return (l[0] * r[0], r[0] * l[1] + r[1])
+            dec_cum, drv_cum = jax.lax.associative_scan(combine, (dc, dr), axis=1)
+            h_all = dec_cum * h_in[:, None] + drv_cum   # (B, chunk, Din, N)
+            y_c = jnp.einsum("bcdn,bcn->bcd", h_all, cc)
+            return h_all[:, -1], y_c
+
+        h_last, y_chunks = jax.lax.scan(chunk_step, h0, (decay_c, drive_c, ct_c))
+        y = y_chunks.transpose(1, 0, 2, 3).reshape(b, sp, din)[:, :s]
+
+    y = y.astype(x.dtype) + xs * g("ssm_d").astype(x.dtype)[None, None]
+    y = y * jax.nn.silu(z)
+    out = y @ g("ssm_out_proj")
+    new_state = {"h": h_last.astype(jnp.float32), "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, n_layers: int) -> dict:
+    din = cfg.ssm_expand * cfg.d_model
+    return {
+        "h": jnp.zeros((n_layers, batch, din, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, din), jnp.float32),
+    }

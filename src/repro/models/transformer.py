@@ -1,0 +1,447 @@
+"""Model assembly: stage compiler, forward passes, prefill/decode, loss.
+
+Stage compiler: the per-layer kind list (``ModelConfig.layer_pattern``) is
+run-length grouped into *stages*; each stage's layers are stacked along a
+leading axis and executed with one ``lax.scan``, so a 64-layer model lowers
+to a handful of compact while-loops instead of 64 inlined layer bodies —
+essential for compile time and HLO size at 512 devices.  Heterogeneous
+patterns (gemma3's 5:1 local:global, xlstm's 7:1 mLSTM:sLSTM) simply produce
+more stages.
+
+Cross-entropy is computed in sequence chunks against the (possibly
+vocab-sharded) embedding so the (B, S, V) logits tensor never materializes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import constrain, dp_axes
+from .attention import attention, init_attention
+from .layers import init_norm, norm
+from .mlp import init_mlp, mlp
+from .moe import expert_placement, init_moe, moe
+from .ssm import init_ssm, init_ssm_state, ssm_block
+from .xlstm import (init_mlstm, init_mlstm_state, init_slstm,
+                    init_slstm_state, mlstm_block, slstm_block)
+
+__all__ = ["stages_meta", "Model"]
+
+LOSS_CHUNK = 512
+
+
+def stages_meta(cfg) -> List[Tuple[str, int]]:
+    """Run-length encode the layer pattern into (kind, count) stages."""
+    pattern = cfg.layer_pattern()
+    stages: List[Tuple[str, int]] = []
+    for kind in pattern:
+        if stages and stages[-1][0] == kind:
+            stages[-1] = (kind, stages[-1][1] + 1)
+        else:
+            stages.append((kind, 1))
+    return stages
+
+
+def _dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer_stack(key, cfg, kind: str, count: int) -> Dict[str, jax.Array]:
+    dtype = _dtype(cfg)
+    p: Dict[str, jax.Array] = {}
+    ks = iter(jax.random.split(key, 8))
+
+    def add_norm(name):
+        n = init_norm(cfg.d_model, cfg.norm, dtype)
+        for k, v in n.items():
+            p[f"stk_{name}_{k}"] = jnp.broadcast_to(v[None], (count, *v.shape))
+
+    base = kind.split("+")[0]
+    if base in ("attn", "local"):
+        add_norm("norm1")
+        p.update(init_attention(next(ks), cfg, dtype, stacked=count))
+        add_norm("norm2")
+    elif base == "hybrid":
+        add_norm("norm1")
+        p.update(init_attention(next(ks), cfg, dtype, stacked=count))
+        p.update(init_ssm(next(ks), cfg, dtype, stacked=count))
+        add_norm("norm2")
+    elif base == "mlstm":
+        add_norm("norm1")
+        p.update(init_mlstm(next(ks), cfg, dtype, stacked=count))
+    elif base == "slstm":
+        add_norm("norm1")
+        p.update(init_slstm(next(ks), cfg, dtype, stacked=count))
+    elif base == "xdec":  # whisper decoder layer: self + cross + mlp
+        add_norm("norm1")
+        p.update(init_attention(next(ks), cfg, dtype, stacked=count))
+        add_norm("normx")
+        p.update(init_attention(next(ks), cfg, dtype, stacked=count, cross=True))
+        add_norm("norm2")
+    elif base == "enc":   # whisper encoder layer: bidir self + mlp
+        add_norm("norm1")
+        p.update(init_attention(next(ks), cfg, dtype, stacked=count))
+        add_norm("norm2")
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+
+    if kind.endswith("+moe"):
+        p.update(init_moe(next(ks), cfg, dtype, stacked=count))
+    elif base in ("attn", "local", "hybrid", "xdec", "enc") and cfg.mlp_act != "none":
+        p.update(init_mlp(next(ks), cfg, dtype, stacked=count))
+    return p
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    dtype = _dtype(cfg)
+    meta = stages_meta(cfg)
+    ks = jax.random.split(key, len(meta) + 4)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model), dtype) * 0.02,
+        "stages": {f"s{i}": _init_layer_stack(ks[i + 1], cfg, kind, count)
+                   for i, (kind, count) in enumerate(meta)},
+        "final_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            ks[len(meta) + 1], (cfg.d_model, cfg.vocab_size), dtype) * cfg.d_model ** -0.5
+    if cfg.n_encoder_layers:
+        params["enc_stages"] = {
+            "e0": _init_layer_stack(ks[len(meta) + 2], cfg, "enc", cfg.n_encoder_layers)
+        }
+        params["enc_final_norm"] = init_norm(cfg.d_model, cfg.norm, dtype)
+        params["enc_pos"] = jax.random.normal(
+            ks[len(meta) + 3], (cfg.encoder_len, cfg.d_model), dtype) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stage execution
+# ---------------------------------------------------------------------------
+
+def _slice_params(stacked: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Strip the stk_ prefix from scan-sliced leaves."""
+    return {k[4:]: v for k, v in stacked.items()}
+
+
+def _layer_forward(lp: Dict[str, jax.Array], x, cfg, kind: str, *,
+                   cache=None, pos=None, enc_out=None, placement=None):
+    """One layer.  Returns (x, new_cache, aux_loss)."""
+    base = kind.split("+")[0]
+    use_moe = kind.endswith("+moe")
+    aux_loss = jnp.zeros((), jnp.float32)
+    new_cache = None
+
+    def n1(v):
+        return norm({k.split("_", 1)[1]: lp[k] for k in lp if k.startswith("norm1")}, v, cfg.norm)
+
+    def n2(v):
+        return norm({k.split("_", 1)[1]: lp[k] for k in lp if k.startswith("norm2")}, v, cfg.norm)
+
+    sp = getattr(cfg, "seq_parallel", False)
+
+    def rs(v):
+        # Megatron-SP: pin the post-matmul partial-sum reduction at the block
+        # output, in the matmul's own (bf16) dtype, as a reduce-scatter onto
+        # the sequence-sharded residual — before the fp32 norm region can
+        # absorb (and upcast) the collective.
+        if sp and v.ndim == 3 and v.shape[1] > 1:
+            return constrain(v, P(dp_axes(), "model", None))
+        return v
+
+    if base in ("attn", "local"):
+        window = cfg.window if base == "local" else 0
+        h = n1(x)
+        attn_out, kv_cache = attention(lp, h, cfg, window=window, cache=cache, pos=pos)
+        attn_out = rs(attn_out)
+        if cfg.parallel_block:
+            ff_in = h
+        else:
+            x = x + attn_out
+            ff_in = n2(x)
+        if use_moe:
+            ff_out, aux = moe(lp, ff_in, cfg, placement=placement)
+            aux_loss = aux["aux_loss"]
+        elif cfg.mlp_act != "none":
+            ff_out = mlp(lp, ff_in, cfg)
+        else:
+            ff_out = jnp.zeros_like(x)
+        ff_out = rs(ff_out)
+        x = x + attn_out + ff_out if cfg.parallel_block else x + ff_out
+        new_cache = kv_cache
+    elif base == "hybrid":
+        h = n1(x)
+        attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        ssm_state = None if cache is None else {"h": cache["h"], "conv": cache["conv"]}
+        attn_out, kv_cache = attention(lp, h, cfg, window=cfg.window, cache=attn_cache, pos=pos)
+        ssm_out, ssm_new = ssm_block(lp, h, cfg, state=ssm_state)
+        x = x + 0.5 * (attn_out + ssm_out)
+        x = x + mlp(lp, n2(x), cfg)
+        new_cache = None if cache is None else {**kv_cache, **ssm_new}
+    elif base == "mlstm":
+        out, st = mlstm_block(lp, n1(x), cfg, state=cache)
+        x = x + out
+        new_cache = st if cache is not None else None
+    elif base == "slstm":
+        out, st = slstm_block(lp, n1(x), cfg, state=cache)
+        x = x + out
+        new_cache = st if cache is not None else None
+    elif base == "enc":
+        h = n1(x)
+        attn_out, _ = attention(lp, h, cfg, causal=False)
+        x = x + attn_out
+        x = x + mlp(lp, n2(x), cfg)
+    elif base == "xdec":
+        h = n1(x)
+        attn_out, kv_cache = attention(lp, h, cfg, cache=cache, pos=pos)
+        x = x + attn_out
+        nx = norm({k.split("_", 1)[1]: lp[k] for k in lp if k.startswith("normx")}, x, cfg.norm)
+        xk, xv = enc_out
+        cross_out, _ = attention(lp, nx, cfg, cross_kv=(xk, xv), prefix="x")
+        x = x + cross_out
+        x = x + mlp(lp, n2(x), cfg)
+        new_cache = kv_cache
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux_loss
+
+
+def run_stage(stage_params, x, cfg, kind: str, *, cache=None, pos=None,
+              enc_out=None, placement=None, remat: str = "none"):
+    """scan the stacked layers of one stage.  Returns (x, new_cache, aux)."""
+
+    def body(carry, xs):
+        h = carry
+        lp = _slice_params(xs["p"])
+        c = xs.get("c")
+        e = xs.get("e")
+        h, new_c, aux = _layer_forward(lp, h, cfg, kind, cache=c, pos=pos,
+                                       enc_out=e, placement=placement)
+        if getattr(cfg, "seq_parallel", False) and h.shape[1] > 1:
+            # Megatron-SP: keep the residual stream sequence-sharded over
+            # 'model' between blocks — post-matmul partial sums become
+            # reduce-scatters and the fp32 norm region stays shard-local.
+            h = constrain(h, P(dp_axes(), "model", None))
+        outs = {"aux": aux}
+        if new_c is not None:
+            outs["c"] = new_c
+        return h, outs
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    xs = {"p": stage_params}
+    if cache is not None:
+        xs["c"] = cache
+    if enc_out is not None:
+        xs["e"] = enc_out  # per-layer cross K/V, leading dim == stage count
+    from .costing import unroll_stages
+    if unroll_stages():
+        # calibration path: python loop so HloCostAnalysis sees every layer
+        count = jax.tree.leaves(stage_params)[0].shape[0]
+        outs_list = []
+        for i in range(count):
+            xi = jax.tree.map(lambda a: jax.lax.index_in_dim(
+                a, i, axis=0, keepdims=False), xs)
+            x, out_i = body(x, xi)
+            outs_list.append(out_i)
+        outs = jax.tree.map(lambda *ys: jnp.stack(ys), *outs_list)
+    else:
+        x, outs = jax.lax.scan(body, x, xs)
+    new_cache = outs.get("c")
+    return x, new_cache, outs["aux"].sum()
+
+
+# ---------------------------------------------------------------------------
+# model API
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    """Functional model handle for one architecture config."""
+
+    cfg: Any
+
+    # ---- embedding ----
+    def embed(self, params, tokens):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.scale_embed:
+            x = x * jnp.asarray(self.cfg.d_model ** 0.5, x.dtype)
+        if getattr(self.cfg, "seq_parallel", False) and x.shape[1] > 1:
+            return constrain(x, P(dp_axes(), "model", None))
+        return constrain(x, P(dp_axes(), None, None))
+
+    def unembed_chunked(self, params, h, targets, mask):
+        """Chunked softmax cross-entropy; never materializes (B, S, V).
+
+        h: (B, S, D); targets/mask: (B, S).  Returns (sum_loss, sum_mask).
+        """
+        cfg = self.cfg
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        b, s, d = h.shape
+        from .costing import cost_mode
+        c = s if cost_mode() else min(LOSS_CHUNK, s)
+        pad = (-s) % c
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            targets = jnp.pad(targets, ((0, 0), (0, pad)))
+            mask = jnp.pad(mask, ((0, 0), (0, pad)))
+        nc = h.shape[1] // c
+        hs = h.reshape(b, nc, c, d).swapaxes(0, 1)
+        ts = targets.reshape(b, nc, c).swapaxes(0, 1)
+        ms = mask.reshape(b, nc, c).swapaxes(0, 1)
+
+        def chunk(carry, xs):
+            hc, tc, mc = xs
+            logits = (hc.astype(jnp.float32) @
+                      (w.T if cfg.tie_embeddings else w).astype(jnp.float32))
+            logits = constrain(logits, P(dp_axes(), None, "model"))
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+            nll = (lse - gold) * mc
+            return (carry[0] + nll.sum(), carry[1] + mc.sum()), None
+
+        (loss_sum, mask_sum), _ = jax.lax.scan(
+            chunk, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hs, ts, ms))
+        return loss_sum, mask_sum
+
+    def logits_last(self, params, h):
+        cfg = self.cfg
+        w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        out = h[:, -1:].astype(jnp.float32) @ (w.T if cfg.tie_embeddings else w).astype(jnp.float32)
+        return constrain(out, P(dp_axes(), None, "model"))
+
+    # ---- encoder (whisper) ----
+    def encode(self, params, enc_embeds):
+        cfg = self.cfg
+        x = enc_embeds + params["enc_pos"][None, : enc_embeds.shape[1]]
+        x, _, _ = run_stage(params["enc_stages"]["e0"], x, cfg, "enc")
+        return norm(params["enc_final_norm"], x, cfg.norm)
+
+    def cross_kv(self, params, enc_out):
+        """Precompute per-decoder-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        kv, hd = cfg.n_kv_heads, cfg.head_dim
+        b, se, _ = enc_out.shape
+        out = {}
+        for sname, sp in params["stages"].items():
+            xk = jnp.einsum("bsd,ldk->lbsk", enc_out, sp["stk_xwk"])
+            xv = jnp.einsum("bsd,ldk->lbsk", enc_out, sp["stk_xwv"])
+            out[sname] = (xk.reshape(*xk.shape[:3], kv, hd),
+                          xv.reshape(*xv.shape[:3], kv, hd))
+        return out
+
+    # ---- full forward over the decoder stack ----
+    def backbone(self, params, x, *, cache=None, pos=None, enc_out=None,
+                 remat="none"):
+        cfg = self.cfg
+        meta = stages_meta(cfg)
+        placement = None
+        if cfg.n_experts and cfg.expert_placement != "default":
+            placement = jnp.asarray(expert_placement(cfg))
+        aux_total = jnp.zeros((), jnp.float32)
+        new_cache = {} if cache is not None else None
+        xkv = None
+        for i, (kind, count) in enumerate(meta):
+            sname = f"s{i}"
+            st_cache = cache.get(sname) if cache is not None else None
+            if kind.startswith("xdec") and enc_out is not None:
+                xkv = enc_out[sname] if isinstance(enc_out, dict) else enc_out
+            x, st_new, aux = run_stage(
+                params["stages"][sname], x, cfg, kind, cache=st_cache, pos=pos,
+                enc_out=xkv, placement=placement, remat=remat)
+            aux_total += aux
+            if new_cache is not None:
+                new_cache[sname] = st_new
+        x = norm(params["final_norm"], x, cfg.norm)
+        return x, new_cache, aux_total
+
+    # ---- task heads ----
+    def loss(self, params, batch, remat="none"):
+        """Next-token loss.  batch: tokens (B, S) [+ enc_embeds / img_embeds]."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        enc = None
+        if cfg.n_encoder_layers:
+            enc_out = self.encode(params, batch["enc_embeds"])
+            enc = self.cross_kv(params, enc_out)
+        if cfg.frontend == "vision" and "img_embeds" in batch:
+            # early-fusion stub: image patch embeddings prefix the text
+            fl = batch["img_embeds"].shape[1]
+            img = batch["img_embeds"].astype(_dtype(cfg))
+            text = tokens[:, : tokens.shape[1] - fl]
+            x = jnp.concatenate([img, self.embed(params, text)], axis=1)
+            # position i predicts full-sequence id at i+1; image positions
+            # (except the last, which predicts the first text token) masked
+            targets = jnp.concatenate(
+                [jnp.zeros((tokens.shape[0], fl - 1), tokens.dtype),
+                 text, text[:, -1:]], axis=1)
+            mask = jnp.ones_like(targets, jnp.float32)
+            mask = mask.at[:, : fl - 1].set(0.0)
+        else:
+            x = self.embed(params, tokens)
+            targets = jnp.concatenate([tokens[:, 1:], tokens[:, -1:]], axis=1)
+            mask = jnp.ones_like(targets, jnp.float32)
+        mask = mask.at[:, -1].set(0.0)
+        h, _, aux = self.backbone(params, x, enc_out=enc, remat=remat)
+        loss_sum, mask_sum = self.unembed_chunked(params, h, targets, mask)
+        return loss_sum / jnp.maximum(mask_sum, 1.0) + 0.01 * aux
+
+    def init_cache(self, batch: int, s_max: int, dtype=jnp.bfloat16):
+        """Per-stage decode cache pytree."""
+        cfg = self.cfg
+        cache = {}
+        for i, (kind, count) in enumerate(stages_meta(cfg)):
+            base = kind.split("+")[0]
+            if base in ("attn", "local", "xdec"):
+                from .attention import init_cache as kv_init
+                cache[f"s{i}"] = kv_init(cfg, batch, s_max, count, dtype)
+            elif base == "hybrid":
+                from .attention import init_cache as kv_init
+                c = kv_init(cfg, batch, s_max, count, dtype)
+                c.update(init_ssm_state(cfg, batch, count))
+                cache[f"s{i}"] = c
+            elif base == "mlstm":
+                cache[f"s{i}"] = init_mlstm_state(cfg, batch, count)
+            elif base == "slstm":
+                cache[f"s{i}"] = init_slstm_state(cfg, batch, count)
+        return cache
+
+    def prefill(self, params, batch, s_max: int):
+        """Encode a full prompt, returning (last-token logits, filled cache)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = self.embed(params, tokens)
+        enc = None
+        if cfg.n_encoder_layers:
+            enc_out = self.encode(params, batch["enc_embeds"])
+            enc = self.cross_kv(params, enc_out)
+        cache = self.init_cache(b, s_max, _dtype(cfg))
+        pos = jnp.zeros((b,), jnp.int32)
+        h, cache, _ = self.backbone(params, x, cache=cache, pos=pos, enc_out=enc)
+        return self.logits_last(params, h), cache
+
+    def decode_step(self, params, token, cache, pos, enc_out=None):
+        """One token step.  token: (B, 1); pos: (B,) current write index."""
+        cfg = self.cfg
+        x = self.embed(params, token)
+        enc = None
+        if cfg.n_encoder_layers and enc_out is not None:
+            enc = enc_out
+        h, cache, _ = self.backbone(params, x, cache=cache, pos=pos, enc_out=enc)
+        return self.logits_last(params, h), cache

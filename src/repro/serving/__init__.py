@@ -1,0 +1,4 @@
+"""repro.serving — KV-cached batched inference engine."""
+from .engine import Request, ServingEngine, pack_requests
+
+__all__ = ["Request", "ServingEngine", "pack_requests"]

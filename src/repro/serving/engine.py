@@ -1,0 +1,104 @@
+"""Batched serving engine: prefill + decode with greedy-LPT batch packing.
+
+Requests with heterogeneous prompt lengths are packed into fixed decode
+batches by the paper's greedy partitioner (``repro.core.partitioners``): the
+balance objective that packs equivalence classes onto executors is the same
+one that packs prompts onto batch slots so padded prefill work is minimized
+(DESIGN.md §4 — framework-level reuse of the paper's technique).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.partitioners import greedy_partitioner, partition_stats
+from ..models import Model
+
+__all__ = ["Request", "ServingEngine", "pack_requests"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (L,) int32 token ids
+    max_new_tokens: int = 16
+
+
+def pack_requests(requests: Sequence[Request], n_batches: int):
+    """Greedy-LPT pack requests into ``n_batches`` groups balancing total
+    prefill tokens.  Returns (assignment, stats)."""
+    work = np.array([r.prompt.shape[0] for r in requests], np.float64)
+    assign = greedy_partitioner(np.arange(len(requests)), n_batches, work=work)
+    stats = partition_stats(assign, work, n_batches)
+    return assign, stats
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, s_max: int, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.s_max = s_max
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits) -> jax.Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits[:, -1] / self.temperature).astype(jnp.int32)
+
+    def generate_batch(self, requests: List[Request]) -> List[np.ndarray]:
+        """Prefill a length-homogeneous batch once, then decode greedily.
+
+        Requests in one batch must share a prompt length (``serve`` groups by
+        length): the causal prefill has no padding mask, so padding tokens
+        would leak into attention — length bucketing keeps generation exact
+        (tests/test_serving.py::test_batched_matches_single).
+        """
+        b = len(requests)
+        lens = np.array([r.prompt.shape[0] for r in requests])
+        lmax = int(lens.max())
+        if not (lens == lmax).all():
+            raise ValueError("generate_batch requires equal prompt lengths; "
+                             "use serve() which buckets by length")
+        toks = np.stack([r.prompt for r in requests])
+        logits, cache = self.model.prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.s_max)
+        max_new = max(r.max_new_tokens for r in requests)
+        outs = [[] for _ in range(b)]
+        tok = self._sample(logits)
+        for i in range(b):
+            outs[i].append(int(tok[i]))
+        for t in range(1, max_new):
+            pos = jnp.full((b,), lmax + t - 1, jnp.int32)
+            logits, cache = self._decode(self.params, tok[:, None], cache, pos)
+            tok = self._sample(logits)
+            for i in range(b):
+                if len(outs[i]) < requests[i].max_new_tokens:
+                    outs[i].append(int(tok[i]))
+        return [np.asarray(o, np.int32) for o in outs]
+
+    def serve(self, requests: List[Request], n_batches: int):
+        assign, stats = pack_requests(requests, n_batches)
+        results: dict = {}
+        for gb in range(n_batches):
+            group = [r for r, a in zip(requests, assign) if a == gb]
+            if not group:
+                continue
+            # exactness: sub-batch by prompt length (no padding mask in the
+            # causal prefill; see generate_batch)
+            by_len: dict = {}
+            for r in group:
+                by_len.setdefault(r.prompt.shape[0], []).append(r)
+            for sub in by_len.values():
+                outs = self.generate_batch(sub)
+                for r, o in zip(sub, outs):
+                    results[r.rid] = o
+        return results, stats

@@ -1,0 +1,17 @@
+"""repro.training — optimizer, train step, checkpoint, compression, FT."""
+from .checkpoint import (AsyncCheckpointer, latest_step, restore_checkpoint,
+                         save_checkpoint)
+from .fault_tolerance import RunnerConfig, TrainingRunner
+from .grad_compress import compressed_psum, int8_roundtrip, make_compressor, topk_mask
+from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
+                        global_norm, lr_schedule, zero1_spec_tree)
+from .train_step import make_eval_step, make_train_step
+
+__all__ = [
+    "AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint",
+    "RunnerConfig", "TrainingRunner",
+    "compressed_psum", "int8_roundtrip", "make_compressor", "topk_mask",
+    "adamw_init", "adamw_update", "clip_by_global_norm", "global_norm",
+    "lr_schedule", "zero1_spec_tree",
+    "make_eval_step", "make_train_step",
+]

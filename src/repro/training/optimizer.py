@@ -1,0 +1,122 @@
+"""AdamW (decoupled weight decay) as explicit pytrees, ZeRO-1 ready.
+
+No optax dependency: the optimizer state is a plain pytree so the sharding
+rules (``zero1_spec_tree``) and the distributed checkpoint see ordinary
+arrays.  Moments are fp32 regardless of param dtype (bf16 training keeps an
+fp32 master copy in the state when requested).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["adamw_init", "adamw_update", "global_norm", "clip_by_global_norm",
+           "lr_schedule", "zero1_spec_tree"]
+
+
+def adamw_init(params, master: bool = False, moment_dtype=jnp.float32):
+    zero = lambda p: jnp.zeros(p.shape, moment_dtype)
+    state = {
+        "mu": jax.tree.map(zero, params),
+        "nu": jax.tree.map(zero, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if master:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def lr_schedule(step, base_lr: float, warmup: int, total: int):
+    """Linear warmup + cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return base_lr * warm * cos
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+    use_master = "master" in state
+    ref = state["master"] if use_master else params
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        mdt = mu.dtype
+        mu = (b1 * mu.astype(jnp.float32) + (1 - b1) * g).astype(mdt)
+        nu = (b2 * nu.astype(jnp.float32) + (1 - b2) * g * g).astype(mdt)
+        update = (mu.astype(jnp.float32) / c1) / (jnp.sqrt(nu.astype(jnp.float32) / c2) + eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (update + weight_decay * pf)
+        return pf, mu, nu
+
+    flat_p, treedef = jax.tree.flatten(ref)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_master = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "mu": treedef.unflatten([o[1] for o in out]),
+        "nu": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    orig_flat = jax.tree.leaves(params)
+    new_params = treedef.unflatten(
+        [pf.astype(po.dtype) for pf, po in zip([o[0] for o in out], orig_flat)])
+    if use_master:
+        new_state["master"] = new_master
+    return new_params, new_state
+
+
+def zero1_spec_tree(param_specs, mesh):
+    """ZeRO-1: further shard each optimizer-moment leaf over the data axes on
+    its largest currently-unsharded dimension (divisibility permitting)."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def widen(spec: P, shape) -> P:
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            for a in (e if isinstance(e, (tuple, list)) else (e,)):
+                used.add(a)
+        avail = tuple(a for a in dp if a not in used)
+        if not avail:
+            return spec
+        size = 1
+        for a in avail:
+            size *= mesh.shape[a]
+        if size <= 1:
+            return spec
+        best, best_dim = None, -1
+        for i, (e, s) in enumerate(zip(entries, shape)):
+            if e is None and s % size == 0 and s > best_dim:
+                best, best_dim = i, s
+        if best is not None:
+            entries[best] = avail if len(avail) > 1 else avail[0]
+        return P(*entries)
+
+    return widen

@@ -1,0 +1,69 @@
+"""Train step: loss/grad, microbatch accumulation, clipping, AdamW.
+
+A single pjit-able function per (model, train-config).  Microbatching splits
+the per-device batch with an accumulating ``lax.scan`` so the activation
+footprint scales with the microbatch, not the global batch — the standard
+large-scale memory lever alongside remat.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import adamw_update, clip_by_global_norm, lr_schedule
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(model, tcfg) -> Callable:
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, remat=tcfg.remat)
+
+    def grads_of(params, batch):
+        if tcfg.microbatches <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        m = tcfg.microbatches
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(m, b // m, *x.shape[1:])
+
+        micro = jax.tree.map(split, batch)
+
+        def acc_step(carry, mb):
+            loss_sum, g_sum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            g_sum = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), g_sum, g)
+            return (loss_sum + loss, g_sum), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, g_sum), _ = jax.lax.scan(acc_step, (jnp.zeros(()), zero), micro)
+        grads = jax.tree.map(lambda g: (g / m).astype(jnp.float32), g_sum)
+        return loss_sum / m, grads
+
+    def step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = lr_schedule(opt_state["step"], tcfg.learning_rate,
+                         tcfg.warmup_steps, tcfg.total_steps)
+        params, opt_state = adamw_update(
+            params, grads, opt_state, lr=lr, b1=tcfg.b1, b2=tcfg.b2,
+            weight_decay=tcfg.weight_decay)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr,
+                   "step": opt_state["step"]}
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(model) -> Callable:
+    def step(params, batch):
+        return model.loss(params, batch)
+    return step

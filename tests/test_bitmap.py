@@ -1,0 +1,72 @@
+"""Bitmap tidset representation: pack/unpack, popcount, compaction."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitmap as bm
+
+
+def test_pack_unpack_roundtrip():
+    rng = np.random.default_rng(0)
+    for n_items, n_txn in [(1, 1), (3, 31), (5, 32), (7, 33), (10, 257)]:
+        dense = rng.random((n_items, n_txn)) < 0.3
+        packed = bm.pack_bool_matrix(dense)
+        assert packed.shape == (n_items, bm.n_words(n_txn))
+        np.testing.assert_array_equal(bm.unpack_bitmap(packed, n_txn), dense)
+
+
+def test_pack_transactions_matches_dense():
+    txns = [[0, 2], [1], [0, 1, 3], [], [3, 3, 3]]
+    packed = bm.pack_transactions(txns, n_items=4)
+    dense = np.zeros((4, 5), bool)
+    for tid, t in enumerate(txns):
+        for i in set(t):
+            dense[i, tid] = True
+    np.testing.assert_array_equal(bm.unpack_bitmap(packed, 5), dense)
+
+
+def test_popcount_np_matches_python():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 2**32, size=128, dtype=np.uint32)
+    expect = np.array([bin(int(v)).count("1") for v in x])
+    np.testing.assert_array_equal(bm.popcount_np(x), expect)
+
+
+def test_support_device_matches_host():
+    rng = np.random.default_rng(2)
+    packed = rng.integers(0, 2**32, size=(17, 9), dtype=np.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(bm.support(jnp.asarray(packed))), bm.support_np(packed))
+
+
+def test_column_compact():
+    dense = np.array([[1, 0, 1, 0, 0], [0, 0, 1, 0, 1]], bool)
+    packed = bm.pack_bool_matrix(dense)
+    keep = dense.any(axis=0)
+    compact, kept = bm.column_compact(packed, 5, keep)
+    assert kept == 3
+    np.testing.assert_array_equal(
+        bm.unpack_bitmap(compact, 3), dense[:, keep])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 80), st.integers(0, 2**31))
+def test_property_pack_support(n_items, n_txn, seed):
+    """Property: support == number of distinct txns containing the item."""
+    rng = np.random.default_rng(seed)
+    txns = [rng.choice(n_items, size=rng.integers(0, n_items + 1), replace=False).tolist()
+            for _ in range(n_txn)]
+    packed = bm.pack_transactions(txns, n_items)
+    sup = bm.support_np(packed)
+    for i in range(n_items):
+        assert sup[i] == sum(1 for t in txns if i in t)
+
+
+def test_intersect_support_is_and():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(0, 2**32, (11, 5), dtype=np.uint32))
+    b = jnp.asarray(rng.integers(0, 2**32, (11, 5), dtype=np.uint32))
+    inter, sup = bm.intersect_support(a, b)
+    np.testing.assert_array_equal(np.asarray(inter), np.asarray(a) & np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(sup), bm.support_np(np.asarray(inter)))

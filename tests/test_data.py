@@ -1,0 +1,47 @@
+"""Dataset generators: Table-2 statistical-shape conformance + determinism."""
+import numpy as np
+import pytest
+
+from repro.data import PAPER_DATASETS, generate
+
+
+@pytest.mark.parametrize("name", list(PAPER_DATASETS))
+def test_table2_shape_conformance(name):
+    spec = PAPER_DATASETS[name]
+    sc = 0.05 if spec.n_txn > 20000 else 0.2
+    txns, _ = generate(name, scale=sc, seed=1)
+    widths = np.array([len(t) for t in txns])
+    items = set(i for t in txns for i in t)
+    assert len(txns) == max(16, int(round(spec.n_txn * sc)))
+    assert max(items) < spec.n_items
+    # average transaction width within 15% of Table 2
+    assert abs(widths.mean() - spec.avg_width) / spec.avg_width < 0.15
+    # items must be valid and transactions deduplicated + sorted
+    for t in txns[:50]:
+        assert t == sorted(set(t))
+
+
+def test_generator_deterministic():
+    a, _ = generate("chess", scale=0.1, seed=3)
+    b, _ = generate("chess", scale=0.1, seed=3)
+    assert a == b
+    c, _ = generate("chess", scale=0.1, seed=4)
+    assert a != c
+
+
+def test_attribute_data_is_dense():
+    txns, spec = generate("chess", scale=0.1, seed=0)
+    widths = {len(t) for t in txns}
+    # chess rows are fixed-width attribute vectors (modulo rare collisions)
+    assert max(widths) <= 37 and min(widths) >= 35
+
+
+def test_clickstream_is_sparse_zipf():
+    txns, spec = generate("BMS_WebView_2", scale=0.05, seed=0)
+    counts = {}
+    for t in txns:
+        for i in t:
+            counts[i] = counts.get(i, 0) + 1
+    freq = sorted(counts.values(), reverse=True)
+    # zipf head: top item at least 20x the median
+    assert freq[0] >= 20 * freq[len(freq) // 2]

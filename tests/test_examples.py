@@ -1,0 +1,34 @@
+"""The runnable examples must stay runnable (fast reduced invocations)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ENV = dict(os.environ, PYTHONPATH="src")
+
+
+def run(args, timeout=900):
+    return subprocess.run([sys.executable] + args, capture_output=True,
+                          text=True, env=ENV, cwd=os.getcwd(), timeout=timeout)
+
+
+def test_quickstart():
+    r = run(["examples/quickstart.py", "--dataset", "mushroom",
+             "--min-sup", "0.4", "--scale", "0.1"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "frequent itemsets" in r.stdout
+
+
+def test_mine_driver():
+    r = run(["-m", "repro.launch.mine", "--dataset", "chess",
+             "--min-sup", "0.85", "--scale", "0.1", "--variant", "v6"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "[mine]" in r.stdout
+
+
+def test_mine_distributed():
+    r = run(["examples/mine_distributed.py", "--devices", "2",
+             "--min-sup", "0.35"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "recovered" in r.stdout

@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.popcount_support import (popcount_support,
+                                            popcount_support_ref)
+from repro.kernels.trimatrix import (cooccurrence_mxu_ref, trimatrix,
+                                     trimatrix_ref)
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("m,w", [(1, 1), (7, 3), (64, 17), (300, 130), (257, 513)])
+@pytest.mark.parametrize("bm,bw", [(64, 128), (16, 16)])
+def test_popcount_support_sweep(m, w, bm, bw):
+    a = jnp.asarray(RNG.integers(0, 2**32, (m, w), dtype=np.uint32))
+    b = jnp.asarray(RNG.integers(0, 2**32, (m, w), dtype=np.uint32))
+    ir, sr = popcount_support_ref(a, b)
+    ik, sk = popcount_support(a, b, block_m=bm, block_w=bw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ik))
+    np.testing.assert_array_equal(np.asarray(sr), np.asarray(sk))
+
+
+@pytest.mark.parametrize("n,w", [(1, 1), (5, 3), (33, 9), (70, 40), (130, 65)])
+def test_trimatrix_sweep(n, w):
+    b = jnp.asarray(RNG.integers(0, 2**32, (n, w), dtype=np.uint32))
+    r = trimatrix_ref(b)
+    k = trimatrix(b, block_n=32, block_w=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(k))
+
+
+def test_trimatrix_matches_mxu_variant():
+    b = jnp.asarray(RNG.integers(0, 2**32, (24, 7), dtype=np.uint32))
+    np.testing.assert_array_equal(
+        np.asarray(trimatrix_ref(b)), np.asarray(cooccurrence_mxu_ref(b, 7 * 32)))
+
+
+def test_trimatrix_diag_is_support():
+    from repro.core.bitmap import support_np
+    b = RNG.integers(0, 2**32, (12, 5), dtype=np.uint32)
+    c = np.asarray(trimatrix_ref(jnp.asarray(b)))
+    np.testing.assert_array_equal(np.diag(c), support_np(b))
+
+
+@pytest.mark.parametrize(
+    "b,h,hkv,s,d,causal,win",
+    [
+        (1, 2, 2, 64, 16, True, None),
+        (2, 4, 2, 100, 32, True, None),     # GQA + ragged tail
+        (1, 8, 1, 128, 16, False, None),    # MQA, bidirectional
+        (1, 4, 4, 96, 16, True, 24),        # sliding window
+    ],
+)
+def test_flash_attention_sweep(b, h, hkv, s, d, causal, win):
+    q = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)), jnp.float32)
+    r = attention_ref(q, k, v, causal=causal, window=win)
+    o = flash_attention(q, k, v, causal=causal, window=win,
+                        block_q=32, block_k=32, interpret=True)
+    assert float(jnp.abs(r - o).max()) < 2e-5
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 64, 16)), jnp.bfloat16)
+    r = attention_ref(q, k, v, causal=True)
+    o = flash_attention(q, k, v, causal=True, block_q=32, block_k=32, interpret=True)
+    assert float(jnp.abs(r.astype(jnp.float32) - o.astype(jnp.float32)).max()) < 3e-2
+
+
+def test_chunked_flash_matches_kernel_semantics():
+    """The XLA fallback used by the models must agree with the kernel oracle."""
+    from repro.models.attention import flash_chunked
+    q = jnp.asarray(RNG.normal(size=(2, 70, 4, 16)), jnp.float32)   # (B,S,H,D)
+    k = jnp.asarray(RNG.normal(size=(2, 70, 2, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(2, 70, 2, 16)), jnp.float32)
+    out = flash_chunked(q, k, v, causal=True, window=0, sm_scale=16 ** -0.5,
+                        q_chunk=32, k_chunk=32)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True)
+    assert float(jnp.abs(out - ref.transpose(0, 2, 1, 3)).max()) < 2e-5
+
+
+@pytest.mark.parametrize(
+    "b,kv,g,s,d,win,bs",
+    [
+        (2, 2, 3, 64, 16, 0, 32),
+        (1, 4, 1, 100, 32, 0, 32),    # ragged tail
+        (2, 2, 2, 96, 16, 24, 32),    # sliding window
+        (1, 1, 8, 33, 64, 0, 16),     # MQA, many groups
+    ],
+)
+def test_decode_attention_sweep(b, kv, g, s, d, win, bs):
+    from repro.kernels.decode_attention import (decode_attention,
+                                                decode_attention_ref)
+    q = jnp.asarray(RNG.normal(size=(b, kv, g, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    ln = jnp.asarray(RNG.integers(1, s + 1, (b,)), jnp.int32)
+    r = decode_attention_ref(q, k, v, ln, window=win)
+    o = decode_attention(q, k, v, ln, window=win, block_s=bs, interpret=True)
+    assert float(jnp.abs(r - o).max()) < 2e-5
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel semantics must equal the model's grouped decode attention."""
+    from repro.kernels.decode_attention import decode_attention_ref
+    from repro.models.attention import _decode_attend
+    b, kv, g, s, d = 2, 2, 3, 40, 16
+    q4 = jnp.asarray(RNG.normal(size=(b, 1, kv * g, d)), jnp.float32)
+    ck = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    cv = jnp.asarray(RNG.normal(size=(b, s, kv, d)), jnp.float32)
+    length = 33
+    model_out = _decode_attend(q4, ck, cv, length, d ** -0.5, 0, 0.0)
+    kern_out = decode_attention_ref(
+        q4.reshape(b, kv, g, d), ck, cv,
+        jnp.full((b,), length, jnp.int32))
+    assert float(jnp.abs(model_out.reshape(b, kv, g, d) - kern_out).max()) < 2e-5

@@ -1,0 +1,72 @@
+"""Equivalence-class partitioners: Algorithm-10 formulas + balance props."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (assign_partitions, default_partitioner,
+                        greedy_partitioner, hash_partitioner,
+                        partition_stats, reverse_hash_partitioner)
+
+
+def test_hash_partitioner_formula():
+    v = np.arange(17)
+    np.testing.assert_array_equal(hash_partitioner(v, 5), v % 5)
+
+
+def test_reverse_hash_formula_paper_example():
+    """Paper Algorithm 10: r = v % p; v >= p ? (p-1)-r : r."""
+    p = 4
+    v = np.arange(12)
+    got = reverse_hash_partitioner(v, p)
+    expect = []
+    for vi in v:
+        r = vi % p
+        expect.append((p - 1) - r if vi >= p else r)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_default_is_identity_mod_cores():
+    v = np.arange(9)
+    np.testing.assert_array_equal(default_partitioner(v, 4), v % 4)
+
+
+def test_greedy_beats_hash_on_skewed_work():
+    """The paper's point: class work is heavily skewed by prefix rank; the
+    reverse/greedy schemes must balance strictly better than plain hash."""
+    n, p = 64, 8
+    work = (n - 1 - np.arange(n)).astype(float) ** 2   # first-level pair work
+    res = {}
+    for name in ("hash", "reverse_hash", "greedy"):
+        a = assign_partitions(n, name, p, work=work)
+        res[name] = partition_stats(a, work, p)["padding_efficiency"]
+    assert res["greedy"] >= res["reverse_hash"] >= res["hash"] - 1e-9
+    assert res["greedy"] > 0.95
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 16))
+def test_property_all_partitions_in_range(n, p):
+    for name in ("default", "hash", "reverse_hash", "greedy"):
+        a = assign_partitions(n, name, p)
+        assert a.shape == (n,)
+        assert a.min() >= 0
+        # default creates up to n partitions then schedules mod p
+        limit = p
+        assert a.max() < max(limit, 1)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 100), st.integers(2, 8), st.integers(0, 10_000))
+def test_property_greedy_no_worse_than_any_hash(n, p, seed):
+    rng = np.random.default_rng(seed)
+    work = rng.exponential(1.0, n) ** 2
+    g = partition_stats(assign_partitions(n, "greedy", p, work=work), work, p)
+    h = partition_stats(assign_partitions(n, "hash", p, work=work), work, p)
+    assert g["max"] <= h["max"] + 1e-9
+
+
+def test_partition_stats_fields():
+    a = np.array([0, 0, 1, 1])
+    w = np.array([1.0, 1.0, 1.0, 1.0])
+    s = partition_stats(a, w, 2)
+    assert s["max"] == 2.0 and s["mean"] == 2.0
+    assert abs(s["padding_efficiency"] - 1.0) < 1e-9

@@ -1,0 +1,45 @@
+"""Hypothesis property tests on FIM system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import EclatConfig, bruteforce_fim, mine
+
+db_strategy = st.lists(
+    st.lists(st.integers(0, 7), min_size=0, max_size=6),
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(db_strategy, st.integers(1, 20), st.sampled_from(["v1", "v4", "v6"]))
+def test_property_exact_vs_oracle(txns, min_sup, variant):
+    txns = [sorted(set(t)) for t in txns]
+    res = mine(txns, 8, EclatConfig(min_sup=min_sup, variant=variant, p=3,
+                                    use_diffsets=(variant == "v6")))
+    assert res.support_map() == bruteforce_fim(txns, min_sup)
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_strategy, st.integers(1, 15))
+def test_property_antimonotone(txns, min_sup):
+    """Apriori property: every subset of a frequent itemset is frequent with
+    support >= the superset's."""
+    txns = [sorted(set(t)) for t in txns]
+    sm = mine(txns, 8, EclatConfig(min_sup=min_sup, variant="v4", p=3)).support_map()
+    for iset, sup in sm.items():
+        for drop in range(len(iset)):
+            sub = tuple(x for i, x in enumerate(iset) if i != drop)
+            if sub:
+                assert sub in sm and sm[sub] >= sup
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_strategy, st.integers(1, 15))
+def test_property_min_sup_monotone(txns, min_sup):
+    """Raising min_sup can only shrink the result set."""
+    txns = [sorted(set(t)) for t in txns]
+    lo = mine(txns, 8, EclatConfig(min_sup=min_sup, variant="v4", p=3)).support_map()
+    hi = mine(txns, 8, EclatConfig(min_sup=min_sup + 3, variant="v4", p=3)).support_map()
+    assert set(hi) <= set(lo)
+    for k, v in hi.items():
+        assert lo[k] == v
