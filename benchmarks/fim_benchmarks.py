@@ -86,12 +86,11 @@ def fim_scale(out: List[str]) -> None:
 _CORES_SNIPPET = r"""
 import os, sys, time, json
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%d"
-import jax
 from repro.core import EclatConfig, mine
 from repro.data import generate
+from repro.dist.compat import make_mesh
 txns, spec = generate("T10I4D100K", scale=%f, seed=1)
-mesh = jax.make_mesh((%d,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((%d,), ("data",))
 cfg = EclatConfig(min_sup=0.02, variant="%s", p=10, backend="sharded")
 t0 = time.perf_counter()
 res = mine(txns, spec.n_items, cfg, mesh=mesh)

@@ -25,14 +25,13 @@ def main():
         os.environ["_MINE_CHILD"] = "1"
         os.execv(sys.executable, [sys.executable] + sys.argv)
 
-    import jax
     import numpy as np
     from repro.core import (EclatConfig, assign_partitions, build_vertical,
                             mine, recover_partition)
     from repro.data import generate
+    from repro.dist.compat import make_mesh
 
-    mesh = jax.make_mesh((args.devices,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((args.devices,), ("data",))
     txns, spec = generate(args.dataset, scale=0.2, seed=1)
     cfg = EclatConfig(min_sup=args.min_sup, variant="v5",
                       p=2 * args.devices, backend="sharded")

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..dist.compat import shard_map
 from . import bitmap as bm
 from .vertical import VerticalDB, sort_items
 
@@ -86,7 +87,7 @@ def build_vertical_accumulated(
             return jax.lax.psum(part[0], axis)
 
         merged = jax.jit(
-            jax.shard_map(
+            shard_map(
                 _merge, mesh=mesh, in_specs=P(axis, None, None), out_specs=P()
             )
         )(jnp.asarray(partials))

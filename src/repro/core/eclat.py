@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..dist.compat import shard_map
 from . import bitmap as bm
 from .accumulator import build_vertical_accumulated
 from .equivalence import class_segments, pair_work, segment_pairs
@@ -151,7 +152,7 @@ class _Executor:
 
             self._sharded = {
                 mode: jax.jit(
-                    jax.shard_map(
+                    shard_map(
                         lambda bms, l, r, s, _m=mode: _local(bms, l, r, s, _m),
                         mesh=mesh,
                         in_specs=(P(), P(axis), P(axis), P(axis)),

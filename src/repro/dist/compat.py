@@ -1,0 +1,58 @@
+"""jax version-drift shims for the dist layer.
+
+The repo targets the jax.sharding API as of jax >= 0.5 (``AxisType``,
+``jax.make_mesh(..., axis_types=...)``, top-level ``jax.shard_map``) while
+remaining runnable on jax 0.4.x, where none of those exist yet.  Every call
+site that would otherwise touch a drifting symbol goes through this module:
+
+  make_mesh   ``jax.make_mesh`` with ``axis_types`` accepted on every version
+              (silently dropped on 0.4.x, where all mesh axes are Auto-like)
+  shard_map   ``jax.shard_map`` on >= 0.5/0.6, else
+              ``jax.experimental.shard_map.shard_map``
+  AxisType    the real enum when available, else a stand-in with the same
+              member names so ``AxisType.Auto`` spells the same everywhere
+"""
+from __future__ import annotations
+
+import enum
+
+import jax
+
+__all__ = ["AxisType", "make_mesh", "shard_map", "HAS_AXIS_TYPES"]
+
+HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+
+if HAS_AXIS_TYPES:
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stand-in for ``jax.sharding.AxisType`` on jax 0.4.x."""
+
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` that accepts ``axis_types`` on every jax version.
+
+    On jax >= 0.5 the types are forwarded (defaulting every axis to Auto, the
+    GSPMD-propagation behaviour the whole codebase assumes).  On 0.4.x the
+    argument is dropped — meshes there are implicitly Auto.
+    """
+    axis_shapes = tuple(axis_shapes)
+    axis_names = tuple(axis_names)
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if HAS_AXIS_TYPES:
+        if axis_types is None:
+            axis_types = (AxisType.Auto,) * len(axis_names)
+        kwargs["axis_types"] = tuple(axis_types)
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401

@@ -1,0 +1,273 @@
+"""Sharding rules: mesh registry, dp axes, parameter/batch placement.
+
+This is the contract between the mining/model core and every scaled
+workload (DESIGN.md §2).  The mesh carries at most four axis names:
+
+  pod, data   gradient-reduction ("data-parallel") axes — batches and expert
+              blocks split here; ``dp_axes`` returns them in mesh order
+  model       tensor-parallel axis — matmul weights split here
+  pipe        reserved for deeper topologies; never used by the rules
+
+Placement is *rule-based over parameter path + shape*, never stored with the
+checkpoint, so checkpoints stay mesh-agnostic (elastic reshard) and a config
+change re-derives the whole plan.  Rules follow Megatron conventions:
+column-parallel weights (wq/wk/wv, w_up/w_gate, *_in_proj) split their
+output dim over 'model'; row-parallel weights (wo, w_down, *_out_proj)
+split their input dim; experts split over the EP (data) axis with d_ff over
+'model' (or over (data, model) jointly for ``expert_sharding="tp2d"``);
+norms, biases, routers and other small leaves replicate.  Every rule is
+divisibility-guarded: a dim that doesn't divide its axis stays replicated
+(e.g. whisper's 51865 vocab on a 16-wide model axis).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["set_mesh", "get_mesh", "reset_mesh", "dp_axes", "constrain",
+           "param_spec", "batch_spec", "spec_tree", "sharding_tree"]
+
+# axis names that count as gradient-reduction ("data-parallel") axes
+DP_AXIS_NAMES = ("pod", "data")
+
+# ---------------------------------------------------------------------------
+# mesh registry
+# ---------------------------------------------------------------------------
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh) -> Any:
+    """Register ``mesh`` as the process-wide mesh (None to clear).
+
+    Model code reads it back through :func:`get_mesh` at trace time, so the
+    launch layer sets it once before building/jitting a step.
+    """
+    global _MESH
+    _MESH = mesh
+    return mesh
+
+
+def get_mesh():
+    """The registered mesh, else the active ``with mesh:`` context, else None."""
+    if _MESH is not None:
+        return _MESH
+    try:  # thread-local context mesh (private path, stable across 0.4/0.5)
+        from jax._src import mesh as mesh_lib
+        env_mesh = mesh_lib.thread_resources.env.physical_mesh
+        if env_mesh is not None and not env_mesh.empty:
+            return env_mesh
+    except Exception:
+        pass
+    return None
+
+
+def reset_mesh() -> None:
+    """Clear the registry (tests; single-device paths)."""
+    set_mesh(None)
+
+
+# ---------------------------------------------------------------------------
+# axes + activation constraints
+# ---------------------------------------------------------------------------
+
+def dp_axes(mesh=None) -> Tuple[str, ...]:
+    """Gradient-reduction axis names in mesh order; ("data",) without a mesh
+    (the spec is then only ever used inside specs that a missing mesh makes
+    a no-op)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return ("data",)
+    dp = tuple(a for a in mesh.axis_names if a in DP_AXIS_NAMES)
+    return dp or ("data",)
+
+
+def _entry_axes(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        return (entry,)
+    return tuple(entry)
+
+
+def _sanitize(spec: P, shape, mesh) -> P:
+    """Drop spec entries naming absent axes or not dividing their dim."""
+    names = set(mesh.axis_names)
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        axes = _entry_axes(entry)
+        if not axes or not all(a in names for a in axes):
+            out.append(None)
+            continue
+        size = math.prod(mesh.shape[a] for a in axes)
+        if size and dim % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x, spec: P):
+    """``with_sharding_constraint`` against the registered/active mesh;
+    identity when no mesh is set (single-device paths, host tests)."""
+    mesh = get_mesh()
+    if mesh is None or getattr(mesh, "empty", False):
+        return x
+    spec = _sanitize(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter placement rules
+# ---------------------------------------------------------------------------
+
+def _axis_size(mesh, name: str) -> int:
+    try:
+        return int(mesh.shape[name])
+    except Exception:
+        return 0
+
+
+def _repl(shape) -> P:
+    return P(*([None] * len(shape)))
+
+
+# row-parallel projections: input dim (-2) over 'model'
+_ROW_NAMES = ("wo", "xwo", "w_down", "out_proj")
+# leaves that always replicate regardless of shape
+_REPLICATED_NAMES = ("router", "enc_pos", "conv", "a_log")
+
+
+def _leaf_name(path: str) -> str:
+    name = path.split("/")[-1]
+    if name.startswith("stk_"):
+        name = name[4:]
+    return name
+
+
+def param_spec(path: str, shape, mesh, expert_sharding: str = "ep",
+               mlp_dp: bool = False) -> P:
+    """Placement rule for one parameter leaf.
+
+    ``path`` is the '/'-joined pytree path (e.g. "stages/s0/stk_wq"),
+    ``shape`` the leaf shape (a leading stack dim from the stage compiler is
+    transparent), ``mesh`` anything with ``.axis_names`` and a ``.shape``
+    mapping.  ``expert_sharding``: "ep"/"ep_pad" split experts over the last
+    dp axis with d_ff over 'model'; "tp2d" leaves experts replicated and
+    splits d_ff over (data, model) jointly.  ``mlp_dp`` replicates the dense
+    FFN weights (the seq-parallel data-parallel-FFN posture, see models.mlp).
+    """
+    name = _leaf_name(path)
+    names = set(mesh.axis_names)
+    m = _axis_size(mesh, "model") if "model" in names else 0
+
+    def over_model(dim: int) -> bool:
+        return m > 0 and dim % m == 0
+
+    # --- always-replicated leaves ---------------------------------------
+    if len(shape) == 0 or any(t in name for t in ("norm", "scale", "bias")):
+        return _repl(shape)
+    if any(name == t or name.endswith(t) for t in _REPLICATED_NAMES):
+        return _repl(shape)
+
+    # --- embedding / unembedding ----------------------------------------
+    if name == "embed":
+        # vocab over 'model' (chunked loss reduces over it); replicate when
+        # the vocab doesn't divide (whisper's 51865)
+        if over_model(shape[0]):
+            return P("model", *([None] * (len(shape) - 1)))
+        return _repl(shape)
+    if name == "lm_head":
+        if over_model(shape[-1]):
+            return P(*([None] * (len(shape) - 1)), "model")
+        return _repl(shape)
+
+    # --- experts ----------------------------------------------------------
+    if "experts" in name:
+        # (stack?, E, d_in, d_ff) for up/gate, (stack?, E, d_ff, d_out) down
+        entries = [None] * len(shape)
+        ff_dim = len(shape) - 1 if name.endswith(("up", "gate")) else len(shape) - 2
+        if expert_sharding == "tp2d":
+            axes = tuple(a for a in (*dp_axes(mesh), "model") if a in names)
+            size = math.prod(_axis_size(mesh, a) for a in axes) if axes else 0
+            if axes and size and shape[ff_dim] % size == 0:
+                entries[ff_dim] = axes if len(axes) > 1 else axes[0]
+            return P(*entries)
+        ep_axis = dp_axes(mesh)[-1]
+        e_dim = len(shape) - 3
+        if ep_axis in names and shape[e_dim] % max(_axis_size(mesh, ep_axis), 1) == 0:
+            entries[e_dim] = ep_axis
+        if over_model(shape[ff_dim]):
+            entries[ff_dim] = "model"
+        return P(*entries)
+
+    # --- dense FFN under mlp_dp: replicate over 'model' -------------------
+    if mlp_dp and name in ("w_up", "w_gate", "w_down"):
+        return _repl(shape)
+
+    # --- row-parallel (output projections): input dim over 'model' --------
+    if len(shape) >= 2 and any(name == t or name.endswith(t) for t in _ROW_NAMES):
+        if over_model(shape[-2]):
+            entries = [None] * len(shape)
+            entries[-2] = "model"
+            return P(*entries)
+        return _repl(shape)
+
+    # --- column-parallel (everything else >= 2D): output dim over 'model' -
+    if len(shape) >= 2 and over_model(shape[-1]):
+        entries = [None] * len(shape)
+        entries[-1] = "model"
+        return P(*entries)
+    return _repl(shape)
+
+
+# ---------------------------------------------------------------------------
+# batch + tree-level rules
+# ---------------------------------------------------------------------------
+
+def batch_spec(batch: int, mesh=None) -> P:
+    """Leading-axis spec for a global batch: split over the dp axes when the
+    batch divides them, else replicate (odd calibration batches)."""
+    mesh = mesh if mesh is not None else get_mesh()
+    if mesh is None:
+        return P(None)
+    dp = dp_axes(mesh)
+    size = math.prod(_axis_size(mesh, a) for a in dp)
+    if size and batch % size == 0:
+        return P(dp if len(dp) > 1 else dp[0])
+    return P(None)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_tree(tree, mesh, expert_sharding: str = "ep", mlp_dp: bool = False):
+    """Map :func:`param_spec` over a parameter pytree -> tree of P."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(_path_str(path), leaf.shape, mesh,
+                                      expert_sharding, mlp_dp),
+        tree)
+
+
+def sharding_tree(tree, mesh, expert_sharding: str = "ep",
+                  mlp_dp: bool = False):
+    """Same rules as :func:`spec_tree` but as NamedSharding leaves, ready for
+    ``jax.device_put`` / ``jit(in_shardings=...)``."""
+    specs = spec_tree(tree, mesh, expert_sharding, mlp_dp)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -14,6 +14,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from ..dist.compat import AxisType, make_mesh
+
 __all__ = ["make_production_mesh", "make_mesh_named", "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = ((16, 16), ("data", "model"))
@@ -23,8 +25,7 @@ MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_mesh_named(name: str) -> jax.sharding.Mesh:
@@ -33,9 +34,7 @@ def make_mesh_named(name: str) -> jax.sharding.Mesh:
     if name in ("multi", "multi_pod", "2x16x16"):
         return make_production_mesh(multi_pod=True)
     if name == "tiny":   # tests: 4 host devices
-        return jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return make_mesh((2, 2), ("data", "model"))
     if name == "pipeline":  # optional deeper topology (not an assigned mesh)
-        return jax.make_mesh((2, 2, 8, 16), ("pipe", "pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 4)
+        return make_mesh((2, 2, 8, 16), ("pipe", "pod", "data", "model"))
     raise ValueError(f"unknown mesh {name!r}")

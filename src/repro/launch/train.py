@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from ..configs import SHAPES, TrainConfig, get_config
 from ..configs.reduced import reduced_config
 from ..data import TokenPipeline
-from ..dist.sharding import set_mesh, sharding_tree, spec_tree
+from ..dist.sharding import set_mesh, sharding_tree
 from ..models import Model, init_params
 from ..training import (RunnerConfig, TrainingRunner, adamw_init,
                         make_train_step)
@@ -53,14 +53,15 @@ def main(argv=None):
     tcfg = TrainConfig(total_steps=args.steps, microbatches=args.microbatches,
                        remat=args.remat)
     step = make_train_step(model, tcfg)
-    shardings = None
     if mesh is not None:
         pshard = sharding_tree(jax.eval_shape(lambda: params), mesh,
                                cfg.expert_sharding)
         params = jax.device_put(params, pshard)
-        shardings = {"params": pshard,
-                     "opt": jax.tree.map(lambda _: None, opt)}
-        step = jax.jit(step, in_shardings=(pshard, None, None))
+        # pin out_shardings for params too: the runner feeds step outputs
+        # back in, and a committed output whose GSPMD-chosen sharding drifts
+        # from in_shardings fails the next call
+        step = jax.jit(step, in_shardings=(pshard, None, None),
+                       out_shardings=(pshard, None, None))
     else:
         step = jax.jit(step)
 

@@ -1,0 +1,68 @@
+"""Thin ``hypothesis`` fallback so property tests collect without the package.
+
+When ``hypothesis`` is installed (requirements-dev.txt; CI does), this module
+re-exports the real ``given``/``settings``/``strategies`` untouched.  When it
+is missing (the hermetic container), a deterministic miniature replaces it:
+each strategy draws from a seeded ``random.Random`` and ``given`` simply runs
+the test body ``max_examples`` times.  No shrinking, no database — enough to
+keep the invariants exercised, not a substitute for the real engine.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+
+    import random
+    import types
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elements.draw(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    def _floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    st = types.SimpleNamespace(
+        integers=_integers, lists=_lists, sampled_from=_sampled_from,
+        booleans=_booleans, floats=_floats)
+
+    def given(*strategies_args):
+        def deco(fn):
+            # no functools.wraps: the wrapper must expose a ZERO-arg
+            # signature or pytest treats the drawn params as fixtures
+            def wrapper():
+                n = getattr(wrapper, "_max_examples", 20)
+                rng = random.Random(0xEC1A7)
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strategies_args))
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._max_examples = 20
+            return wrapper
+        return deco
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -52,9 +52,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.training import restore_checkpoint, save_checkpoint
+from repro.dist.compat import make_mesh
 d = sys.argv[1]
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 t = {"w": jnp.arange(64.0).reshape(8, 8)}
 sh = {"w": NamedSharding(mesh, P("data", "model"))}
 if sys.argv[2] == "save":

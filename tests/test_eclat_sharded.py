@@ -9,7 +9,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np, jax, json
 from repro.core import mine, EclatConfig, bruteforce_fim
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.dist.compat import make_mesh
+mesh = make_mesh((4,), ("data",))
 rng = np.random.default_rng(7)
 txns = []
 for _ in range(200):

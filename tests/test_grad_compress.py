@@ -56,10 +56,11 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.training import compressed_psum
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.dist.compat import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 x = jnp.arange(16.0).reshape(4, 4) / 7.3
-f = jax.jit(jax.shard_map(lambda v: compressed_psum(v[0], "data", "int8")[None],
-                          mesh=mesh, in_specs=P("data"), out_specs=P("data")))
+f = jax.jit(shard_map(lambda v: compressed_psum(v[0], "data", "int8")[None],
+                      mesh=mesh, in_specs=P("data"), out_specs=P("data")))
 out = np.asarray(f(x))
 expect = np.asarray(x).mean(0)
 err = np.abs(out - expect[None]).max()

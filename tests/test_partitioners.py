@@ -1,6 +1,6 @@
 """Equivalence-class partitioners: Algorithm-10 formulas + balance props."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (assign_partitions, default_partitioner,
                         greedy_partitioner, hash_partitioner,

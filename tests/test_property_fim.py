@@ -1,6 +1,6 @@
 """Hypothesis property tests on FIM system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import EclatConfig, bruteforce_fim, mine
 
