@@ -7,16 +7,24 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   fim_cores            Fig 15: executor-core scaling (subprocess per count)
   partitioner_balance  §4.5 extension: padding efficiency per partitioner
   kernel_microbench    kernels: popcount-support / trimatrix / containment
+  engine               core.engine backend trajectory -> BENCH_engine.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
 paper-complete sweep, BENCH_ONLY=<name> to run a single table.
+CLI: ``--smoke`` runs only the engine table at a CI-sized scale (still
+writes BENCH_engine.json); ``--only <name>`` mirrors BENCH_ONLY.
 """
+import argparse
+import functools
 import os
 import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _ROOT)                      # `benchmarks` package
+sys.path.insert(0, os.path.join(_ROOT, "src"))  # `repro`
 
+from benchmarks.engine_bench import engine_bench
 from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
 from benchmarks.micro import kernel_microbench, moe_balance
@@ -27,15 +35,23 @@ TABLES = {
     "fim_cores": fim_cores,
     "partitioner_balance": partitioner_balance,
     "kernel_microbench": kernel_microbench,
+    "engine": engine_bench,
     "moe_balance": moe_balance,
 }
 
 
 def main() -> None:
-    only = os.environ.get("BENCH_ONLY")
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: engine table only, tiny scale")
+    ap.add_argument("--only", default=os.environ.get("BENCH_ONLY"),
+                    help="run a single table by name")
+    args = ap.parse_args()
+
+    tables = {"engine": functools.partial(engine_bench, smoke=True)} if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
-    for name, fn in TABLES.items():
-        if only and name != only:
+    for name, fn in tables.items():
+        if args.only and name != args.only:
             continue
         try:
             fn(rows)

@@ -2,6 +2,7 @@
 
 Public surface:
   mine / EclatConfig / EclatResult     level-wise RDD-Eclat, variants v1..v6
+  make_engine / available_backends      pluggable device-executor backends
   apriori_mine                          YAFIM-style Spark-Apriori baseline
   bruteforce_fim                        exact oracle for tests
   build_vertical / filter_transactions  vertical DB construction
@@ -11,6 +12,8 @@ Public surface:
 """
 from .apriori import AprioriResult, apriori_mine
 from .eclat import VARIANTS, EclatConfig, EclatResult, mine
+from .engine import (Engine, LevelResult, available_backends, make_engine,
+                     register_backend)
 from .itemsets import ItemsetStore, LevelRecord, generate_rules
 from .lineage import load_mining_checkpoint, recover_partition, save_mining_checkpoint
 from .oracle import bruteforce_fim
@@ -29,6 +32,8 @@ from .accumulator import HostAccumulator, build_vertical_accumulated
 __all__ = [
     "AprioriResult", "apriori_mine",
     "VARIANTS", "EclatConfig", "EclatResult", "mine",
+    "Engine", "LevelResult", "available_backends", "make_engine",
+    "register_backend",
     "ItemsetStore", "LevelRecord", "generate_rules",
     "load_mining_checkpoint", "recover_partition", "save_mining_checkpoint",
     "bruteforce_fim",

@@ -1,12 +1,16 @@
 """RDD-Eclat on JAX: the paper's five variants (plus a beyond-paper sixth).
 
-Execution model (see DESIGN.md §2): the host process plays the Spark driver —
-it owns data-dependent control flow (class segmentation, survivor compaction,
-checkpointing) — while devices execute fixed-shape batched AND+popcount over
-bucket-padded pair lists (the executor tasks).  Equivalence classes are
-assigned to partitions once, from their 1-length prefix, and descendants
-never migrate: the mining is communication-free after partitioning, exactly
-the property the paper engineers on Spark.
+Execution model (see DESIGN.md §2-3): the host process plays the Spark driver
+— it owns data-dependent control flow (class segmentation, survivor
+bookkeeping, checkpointing) — while devices execute the tidset-intersection
+hot loop behind the ``core.engine`` backend interface (jnp reference, fused
+Pallas kernel, or shard_map over a mesh).  Equivalence classes are assigned
+to partitions once, from their 1-length prefix, and descendants never
+migrate: the mining is communication-free after partitioning, exactly the
+property the paper engineers on Spark.
+
+This module contains no device-execution details — no pallas, shard_map or
+padding logic; ``EclatConfig.backend`` selects the engine backend.
 
 Variants:
   v1  vertical build via scatter, no filtering, default partitioner
@@ -20,17 +24,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import os
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from ..dist.compat import shard_map
-from . import bitmap as bm
+from . import engine as eng
 from .accumulator import build_vertical_accumulated
 from .equivalence import class_segments, pair_work, segment_pairs
 from .itemsets import ItemsetStore, LevelRecord
@@ -58,9 +59,9 @@ class EclatConfig:
     tri_matrix: Optional[bool] = None   # None = auto (paper's triMatrixMode)
     tri_matrix_max_items: int = 4096    # auto threshold (paper: item-id range)
     use_diffsets: bool = False          # v6 only (dEclat)
-    backend: str = "batched"            # batched | sharded
+    backend: str = "pallas"             # jnp | pallas | sharded ("batched" = legacy alias)
     max_k: Optional[int] = None
-    bucket_min: int = 1024              # pair-buffer bucket floor
+    bucket_min: int = 1024              # pair-buffer bucket-ladder floor
     chunk_pairs: int = 1 << 18          # level-2 chunking when tri-matrix off
     checkpoint_dir: Optional[str] = None
     checkpoint_every_level: bool = False
@@ -92,128 +93,24 @@ class EclatResult:
         return self.store.support_map()
 
 
-# ---------------------------------------------------------------------------
-# device executors
-# ---------------------------------------------------------------------------
+def _resolve_engine(config: EclatConfig, mesh: Optional[jax.sharding.Mesh]) -> eng.Engine:
+    """Map (config.backend, mesh) onto an engine instance.
 
-def _bucket(n: int, floor: int) -> int:
-    b = max(int(floor), 1)
-    while b < n:
-        b <<= 1
-    return b
-
-
-@jax.jit
-def _pairs_tidset(bitmaps, left, right):
-    a = jnp.take(bitmaps, left, axis=0)
-    b = jnp.take(bitmaps, right, axis=0)
-    inter = jnp.bitwise_and(a, b)
-    return inter, jax.lax.population_count(inter).astype(jnp.int32).sum(-1)
-
-
-@jax.jit
-def _pairs_diffset(bitmaps, left, right, sup_left):
-    """dEclat: d(Pab) = d(Pb) \\ d(Pa); sup = sup(Pa) - |d(Pab)|."""
-    a = jnp.take(bitmaps, left, axis=0)
-    b = jnp.take(bitmaps, right, axis=0)
-    diff = jnp.bitwise_and(b, jnp.bitwise_not(a))
-    return diff, sup_left - jax.lax.population_count(diff).astype(jnp.int32).sum(-1)
-
-
-@jax.jit
-def _pairs_tid_to_diff(bitmaps, left, right, sup_left):
-    """Tidset -> diffset switch level: d(ij) = t(i) \\ t(j)."""
-    a = jnp.take(bitmaps, left, axis=0)
-    b = jnp.take(bitmaps, right, axis=0)
-    diff = jnp.bitwise_and(a, jnp.bitwise_not(b))
-    return diff, sup_left - jax.lax.population_count(diff).astype(jnp.int32).sum(-1)
-
-
-class _Executor:
-    """Runs padded pair batches; batched (1-device) or shard_map (D devices)."""
-
-    def __init__(self, cfg: EclatConfig, mesh: Optional[jax.sharding.Mesh], axis: str = "data"):
-        self.cfg = cfg
-        self.mesh = mesh
-        self.axis = axis
-        self.n_intersections = 0
-        self.n_padded = 0
-        self.device_pair_counts: List[np.ndarray] = []
-        if mesh is not None:
-            d = mesh.shape[axis]
-
-            def _local(bitmaps, left, right, sup_left, mode):
-                # left/right/sup_left arrive as this device's (qmax,) slice
-                if mode == 0:
-                    return _pairs_tidset(bitmaps, left, right)
-                if mode == 1:
-                    return _pairs_tid_to_diff(bitmaps, left, right, sup_left)
-                return _pairs_diffset(bitmaps, left, right, sup_left)
-
-            self._sharded = {
-                mode: jax.jit(
-                    shard_map(
-                        lambda bms, l, r, s, _m=mode: _local(bms, l, r, s, _m),
-                        mesh=mesh,
-                        in_specs=(P(), P(axis), P(axis), P(axis)),
-                        out_specs=(P(axis), P(axis)),
-                    )
-                )
-                for mode in (0, 1, 2)
-            }
-            self.n_devices = d
+    A mesh always means the sharded backend (the paper's executor mapping),
+    with the single-device backend as its inner executor; ``"batched"`` is
+    the legacy alias for the single-device default (pallas).
+    """
+    backend = config.backend
+    if backend in ("batched", "auto"):
+        backend = "pallas"
+    if mesh is not None or backend == "sharded":
+        if mesh is None:
+            backend = "pallas"      # sharded without a mesh degrades gracefully
         else:
-            self.n_devices = 1
-
-    def run(self, bitmaps, left, right, sup_left, device_of_pair, mode: int):
-        """mode: 0=tidset AND, 1=tidset->diffset, 2=diffset.
-
-        Returns (out_bitmaps, supports) aligned with the input pair order.
-        """
-        q = left.shape[0]
-        self.n_intersections += int(q)
-        if self.mesh is None:
-            qb = _bucket(q, self.cfg.bucket_min)
-            lpad = np.zeros(qb, np.int32)
-            rpad = np.zeros(qb, np.int32)
-            spad = np.zeros(qb, np.int32)
-            lpad[:q], rpad[:q], spad[:q] = left, right, sup_left
-            if mode == 0:
-                out, sup = _pairs_tidset(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad))
-            elif mode == 1:
-                out, sup = _pairs_tid_to_diff(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad), jnp.asarray(spad))
-            else:
-                out, sup = _pairs_diffset(bitmaps, jnp.asarray(lpad), jnp.asarray(rpad), jnp.asarray(spad))
-            self.n_padded += qb - q
-            return out, np.asarray(sup)[:q], np.arange(q)
-
-        # sharded: order pairs by device, pad each device block to the bucket
-        d = self.n_devices
-        order = np.argsort(device_of_pair, kind="stable")
-        counts = np.bincount(device_of_pair, minlength=d)
-        self.device_pair_counts.append(counts)
-        qmax = _bucket(int(counts.max()) if q else 1, self.cfg.bucket_min)
-        lpad = np.zeros((d, qmax), np.int32)
-        rpad = np.zeros((d, qmax), np.int32)
-        spad = np.zeros((d, qmax), np.int32)
-        slot_of_pair = np.empty(q, np.int64)
-        off = 0
-        for dev in range(d):
-            c = int(counts[dev])
-            idx = order[off: off + c]
-            lpad[dev, :c] = left[idx]
-            rpad[dev, :c] = right[idx]
-            spad[dev, :c] = sup_left[idx]
-            slot_of_pair[idx] = dev * qmax + np.arange(c)
-            off += c
-        self.n_padded += d * qmax - q
-        out, sup = self._sharded[mode](
-            bitmaps,
-            jnp.asarray(lpad.reshape(d * qmax)),
-            jnp.asarray(rpad.reshape(d * qmax)),
-            jnp.asarray(spad.reshape(d * qmax)),
-        )
-        return out, np.asarray(sup).reshape(-1)[slot_of_pair], slot_of_pair
+            inner = backend if backend in ("jnp", "pallas") else "pallas"
+            return eng.make_engine("sharded", mesh=mesh,
+                                   bucket_min=config.bucket_min, inner=inner)
+    return eng.make_engine(backend, bucket_min=config.bucket_min)
 
 
 # ---------------------------------------------------------------------------
@@ -267,10 +164,10 @@ def mine(
     est = pair_work(sizes1 + 1, w)  # +1: member count of class r is n1-1-r
     eff_p = config.p if spec["partitioner"] in ("hash", "reverse_hash", "greedy") else max(n_classes, 1)
     table = assign_partitions(n_classes, spec["partitioner"], eff_p, work=est)
-    n_dev = mesh.shape["data"] if mesh is not None else 1
-    device_of_partition = (table % max(n_dev, 1)) if spec["partitioner"] == "default" else None
-    # partition -> device round robin
-    part_to_dev = np.arange(eff_p, dtype=np.int64) % max(n_dev, 1)
+    execu = _resolve_engine(config, mesh)
+    stats["backend"] = execu.name
+    # partition -> device round robin (sharded backend only)
+    part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
 
     lvl1_partition = np.concatenate([table, [table[-1] if n_classes else 0]])[:n1] if n1 else np.zeros(0, np.int64)
     store.add_level(
@@ -286,7 +183,6 @@ def mine(
         stats["total_s"] = time.perf_counter() - t_start
         return EclatResult(store=store, db=db, stats=stats)
 
-    execu = _Executor(config, mesh)
     bitmaps = jnp.asarray(db.bitmaps)
     diffsets = config.use_diffsets and config.variant == "v6"
 
@@ -298,35 +194,35 @@ def mine(
     stats["tri_matrix"] = bool(tri)
 
     sup1 = db.supports.astype(np.int32)
+    mode2 = eng.MODE_TID_TO_DIFF if diffsets else eng.MODE_TIDSET
     if tri:
         counts2 = cooccurrence_counts(bitmaps)
-        iu, ju, sup2 = frequent_pairs(counts2, abs_min_sup)
-        # materialize bitmaps only for the survivors
-        mode = 1 if diffsets else 0
-        out, sup_chk, slots = execu.run(
+        iu, ju, _ = frequent_pairs(counts2, abs_min_sup)
+        # materialize bitmaps only for the survivors; every pre-filtered pair
+        # passes the engine's threshold again, so the mask is all-true
+        res = execu.expand(
             bitmaps, iu.astype(np.int32), ju.astype(np.int32), sup1[iu],
-            part_to_dev[table[iu]] if iu.size else np.zeros(0, np.int64), mode,
+            mode=mode2, min_sup=abs_min_sup,
+            device_of_pair=part_to_dev[table[iu]] if iu.size else None,
         )
-        lvl_bitmaps = jnp.take(out.reshape(-1, w), jnp.asarray(slots, jnp.int32), axis=0)
-        sup2 = sup_chk
-        keep = sup2 >= abs_min_sup  # all true by construction, keeps code uniform
-        iu, ju, sup2, lvl_bitmaps = iu[keep], ju[keep], sup2[keep], lvl_bitmaps[jnp.asarray(np.nonzero(keep)[0])]
+        sup2 = res.supports.astype(np.int32)
+        lvl_bitmaps = res.bitmaps
     else:
         # chunked all-pairs (the paper's no-tri-matrix path for BMS datasets)
         iu_all, ju_all = np.triu_indices(n1, k=1)
-        mode = 1 if diffsets else 0
         keep_i, keep_j, keep_s, keep_bm = [], [], [], []
         for s in range(0, iu_all.shape[0], config.chunk_pairs):
             ic = iu_all[s: s + config.chunk_pairs].astype(np.int32)
             jc = ju_all[s: s + config.chunk_pairs].astype(np.int32)
-            out, sup, slots = execu.run(
+            res = execu.expand(
                 bitmaps, ic, jc, sup1[ic],
-                part_to_dev[table[ic]] if ic.size else np.zeros(0, np.int64), mode,
+                mode=mode2, min_sup=abs_min_sup,
+                device_of_pair=part_to_dev[table[ic]] if ic.size else None,
             )
-            m = sup >= abs_min_sup
-            if m.any():
-                keep_i.append(ic[m]); keep_j.append(jc[m]); keep_s.append(sup[m])
-                keep_bm.append(jnp.take(out.reshape(-1, w), jnp.asarray(slots[m], jnp.int32), axis=0))
+            if res.mask.any():
+                keep_i.append(ic[res.mask]); keep_j.append(jc[res.mask])
+                keep_s.append(res.supports.astype(np.int32))
+                keep_bm.append(res.bitmaps)
         if keep_i:
             iu = np.concatenate(keep_i).astype(np.int64)
             ju = np.concatenate(keep_j).astype(np.int64)
@@ -349,31 +245,30 @@ def mine(
     t0 = time.perf_counter()
     k = 2
     max_k = config.max_k or n1
+    mode_k = eng.MODE_DIFFSET if diffsets else eng.MODE_TIDSET
     while support.shape[0] and k < max_k:
         starts, sizes = class_segments(class_id)
         left, right = segment_pairs(starts, sizes)
         if left.size == 0:
             break
-        mode = 2 if diffsets else 0
-        dev = part_to_dev[partition[left]]
-        out, sup, slots = execu.run(
+        res = execu.expand(
             lvl_bitmaps, left.astype(np.int32), right.astype(np.int32),
-            support[left].astype(np.int32), dev, mode,
+            support[left].astype(np.int32),
+            mode=mode_k, min_sup=abs_min_sup,
+            device_of_pair=part_to_dev[partition[left]],
         )
-        m = sup >= abs_min_sup
         k += 1
-        if not m.any():
+        if not res.mask.any():
             break
-        sel = np.nonzero(m)[0]
-        new_bitmaps = jnp.take(out.reshape(-1, w), jnp.asarray(slots[sel], jnp.int32), axis=0)
+        sel = np.nonzero(res.mask)[0]
         parent = left[sel]
         item_rank_new = item_rank[right[sel]]
         class_id_new = left[sel]
         partition_new = partition[left[sel]]
-        support_new = sup[sel].astype(np.int64)
+        support_new = res.supports
         store.add_level(LevelRecord(k=k, parent=parent, item_rank=item_rank_new,
                                     support=support_new, partition=partition_new))
-        lvl_bitmaps = new_bitmaps
+        lvl_bitmaps = res.bitmaps
         item_rank, class_id, partition, support = item_rank_new, class_id_new, partition_new, support_new
         if config.checkpoint_dir and config.checkpoint_every_level:
             from .lineage import save_mining_checkpoint
@@ -388,14 +283,6 @@ def mine(
         stats["partition_balance"] = {
             k_: v for k_, v in partition_stats(lvl2.partition, work, eff_p).items() if k_ != "loads"
         }
-    if execu.device_pair_counts:
-        per_dev = np.sum(execu.device_pair_counts, axis=0)
-        stats["device_balance"] = {
-            "pairs_per_device": per_dev.tolist(),
-            "padding_efficiency": float(per_dev.sum() / (per_dev.max() * per_dev.shape[0]))
-            if per_dev.max() > 0 else 1.0,
-        }
-    stats["n_intersections"] = execu.n_intersections
-    stats["n_padded"] = execu.n_padded
+    stats.update(execu.stats())
     stats["total_s"] = time.perf_counter() - t_start
     return EclatResult(store=store, db=db, stats=stats)

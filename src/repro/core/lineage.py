@@ -42,28 +42,29 @@ def recover_partition(
     worker is needed.  Returns {itemset: support} for itemsets of length >= 2
     whose 1-length prefix class is assigned to ``pid``.
     """
-    from .eclat import _pairs_tidset  # reuse the executor primitive
+    from .engine import MODE_TIDSET, make_engine  # replay via the engine interface
 
-    n1, w = db.n_items, db.n_words
+    n1 = db.n_items
     owned = np.nonzero(np.asarray(table) == pid)[0]
     out: Dict[Tuple[int, ...], int] = {}
     bitmaps = jnp.asarray(db.bitmaps)
+    execu = make_engine("jnp", bucket_min=64)
     for rank in owned.tolist():
         # class [rank]: members rank+1..n1-1
         members = np.arange(rank + 1, n1, dtype=np.int32)
         if members.size == 0:
             continue
         left = np.full(members.shape, rank, np.int32)
-        inter, sup = _pairs_tidset(bitmaps, jnp.asarray(left), jnp.asarray(members))
-        sup = np.asarray(sup)
-        keep = sup >= abs_min_sup
-        frontier_bm = inter[jnp.asarray(np.nonzero(keep)[0])]
+        res = execu.expand(bitmaps, left, members,
+                           np.zeros(members.shape[0], np.int32),
+                           mode=MODE_TIDSET, min_sup=abs_min_sup)
+        keep = res.mask
+        frontier_bm = res.bitmaps
         frontier_items: List[Tuple[int, ...]] = [
             (int(db.items[rank]), int(db.items[j])) for j in members[keep]
         ]
         frontier_rank = members[keep]
-        frontier_sup = sup[keep]
-        for iset, s in zip(frontier_items, frontier_sup):
+        for iset, s in zip(frontier_items, res.supports):
             out[tuple(sorted(iset))] = int(s)
         k = 2
         class_id = np.zeros(len(frontier_items), np.int64)
@@ -72,21 +73,19 @@ def recover_partition(
             l, r = segment_pairs(starts, sizes)
             if l.size == 0:
                 break
-            inter, sup = _pairs_tidset(bitmaps=frontier_bm,
-                                       left=jnp.asarray(l.astype(np.int32)),
-                                       right=jnp.asarray(r.astype(np.int32)))
-            sup = np.asarray(sup)
-            keep = sup >= abs_min_sup
+            res = execu.expand(frontier_bm, l.astype(np.int32), r.astype(np.int32),
+                               np.zeros(l.shape[0], np.int32),
+                               mode=MODE_TIDSET, min_sup=abs_min_sup)
             k += 1
-            if not keep.any():
+            if not res.mask.any():
                 break
-            sel = np.nonzero(keep)[0]
+            sel = np.nonzero(res.mask)[0]
             new_items = [frontier_items[l[i]] + (int(db.items[frontier_rank[r[i]]]),) for i in sel]
-            frontier_bm = inter[jnp.asarray(sel)]
+            frontier_bm = res.bitmaps
             frontier_rank = frontier_rank[r[sel]]
             class_id = l[sel]
             frontier_items = new_items
-            for iset, s in zip(frontier_items, sup[sel]):
+            for iset, s in zip(frontier_items, res.supports):
                 out[tuple(sorted(iset))] = int(s)
     return out
 

@@ -103,9 +103,12 @@ def filter_transactions(db: VerticalDB, drop_empty_cols: bool = True) -> Vertica
     """
     if not drop_empty_cols:
         return db
-    touched = np.zeros(db.n_txn, dtype=bool)
-    dense_any = bm.unpack_bitmap(db.bitmaps, db.n_txn)
-    touched = dense_any.any(axis=0)
+    # word-level column occupancy: OR-reduce the rows, then test each
+    # transaction's bit — no dense (n_items, n_txn) matrix is materialized
+    orred = np.bitwise_or.reduce(db.bitmaps, axis=0) if db.n_items else np.zeros(
+        bm.n_words(db.n_txn), db.bitmaps.dtype)
+    t = np.arange(db.n_txn)
+    touched = ((orred[t // bm.WORD_BITS] >> (t % bm.WORD_BITS).astype(orred.dtype)) & 1).astype(bool)
     if touched.all():
         return db  # nothing to compact; avoid a useless repack
     compact, kept = bm.column_compact(db.bitmaps, db.n_txn, touched)

@@ -15,10 +15,12 @@ site that would otherwise touch a drifting symbol goes through this module:
 from __future__ import annotations
 
 import enum
+import inspect
 
 import jax
 
-__all__ = ["AxisType", "make_mesh", "shard_map", "HAS_AXIS_TYPES"]
+__all__ = ["AxisType", "make_mesh", "shard_map", "shard_map_unchecked",
+           "HAS_AXIS_TYPES"]
 
 HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
 
@@ -56,3 +58,35 @@ if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def _rep_check_flag():
+    try:
+        params = inspect.signature(shard_map).parameters
+    except (TypeError, ValueError):
+        return None
+    for name in ("check_rep", "check_vma"):
+        if name in params:
+            return name
+    return None
+
+
+_REP_CHECK_FLAG = _rep_check_flag()
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking disabled, across versions.
+
+    ``pallas_call`` has no replication rule, so a shard-mapped Pallas kernel
+    (the sharded mining engine's fused inner executor) must opt out of the
+    check.  The flag is ``check_rep`` on jax <= 0.6 and ``check_vma`` later;
+    the flag name is resolved from ``shard_map``'s signature at import time,
+    so an unknown rename fails loudly here instead of as an opaque
+    replication-rule error inside the first sharded kernel launch.
+    """
+    if _REP_CHECK_FLAG is None:
+        raise NotImplementedError(
+            "this jax version's shard_map exposes neither check_rep nor "
+            "check_vma; teach dist.compat._rep_check_flag its new name")
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **{_REP_CHECK_FLAG: False})

@@ -1,5 +1,7 @@
 """repro.kernels — Pallas TPU kernels for the framework's compute hot-spots.
 
+fused_intersect  : fused gather + AND + popcount + min-support mask (the
+                   Eclat hot loop; backs ``core.engine``'s pallas backend)
 popcount_support : tidset AND + support counting (paper Algorithm-1 inner loop)
 decode_attention : grouped GQA decode over the KV cache (serving hot-spot)
 trimatrix        : 2-itemset triangular-matrix co-occurrence (paper Phase-2)
@@ -9,6 +11,8 @@ Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (dispatching
 jit wrapper), ref.py (pure-jnp oracle).  Kernels are TPU-target; on this CPU
 container they are validated in interpret mode against the oracles.
 """
-from . import decode_attention, flash_attention, popcount_support, trimatrix
+from . import (decode_attention, flash_attention, fused_intersect,
+               popcount_support, trimatrix)
 
-__all__ = ["decode_attention", "flash_attention", "popcount_support", "trimatrix"]
+__all__ = ["decode_attention", "flash_attention", "fused_intersect",
+           "popcount_support", "trimatrix"]

@@ -1,0 +1,9 @@
+from .fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET,
+                              fused_intersect_pairs)
+from .ops import fused_intersect
+from .ref import fused_intersect_ref
+
+__all__ = [
+    "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
+    "fused_intersect", "fused_intersect_pairs", "fused_intersect_ref",
+]

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: fused gather + AND + popcount + min-support mask.
+
+The Eclat hot loop in one ``pallas_call``: for each candidate pair ``q`` the
+kernel DMA-gathers the two parent bitmap rows straight out of the frontier
+(no materialized ``jnp.take`` copies), intersects them in the mode the miner
+is running in, accumulates the per-row popcount across the word grid, and on
+the last word block converts the count into a support and compares it against
+``min_sup``.  Only the ``(Q,)`` support and mask vectors need to cross back
+to the driver; the ``(Q, W)`` intersection stays device-resident for the
+survivor compaction.
+
+Modes (match ``repro.core.engine``):
+    0  tidset:           inter = a & b,   sup = |inter|
+    1  tidset->diffset:  inter = a & ~b,  sup = sup_left - |inter|
+    2  diffset:          inter = b & ~a,  sup = sup_left - |inter|
+
+The row gather uses ``PrefetchScalarGridSpec``: the pair-index array is a
+scalar-prefetch operand, so the input ``BlockSpec`` index maps read
+``idx_ref[0, q]`` / ``idx_ref[1, q]`` and the pipeline prefetches arbitrary
+frontier rows.  Grid = (Q, W/bw) with one pair row per grid step — the
+gathered rows are not contiguous, so the q dimension cannot be blocked; the
+DMA pipeline overlaps the row fetches instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_W = 512
+
+MODE_TIDSET = 0
+MODE_TID_TO_DIFF = 1
+MODE_DIFFSET = 2
+
+
+def _kernel(idx_ref, supl_ref, msup_ref, a_ref, b_ref,
+            inter_ref, sup_ref, mask_ref, *, mode):
+    q = pl.program_id(0)
+    wj = pl.program_id(1)
+    nw = pl.num_programs(1)
+    a = a_ref[...]
+    b = b_ref[...]
+    if mode == MODE_TIDSET:
+        inter = jnp.bitwise_and(a, b)
+    elif mode == MODE_TID_TO_DIFF:
+        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
+    else:
+        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    inter_ref[...] = inter
+    partial = jax.lax.population_count(inter).astype(jnp.int32).sum()
+
+    @pl.when(wj == 0)
+    def _init():
+        sup_ref[0] = partial
+
+    @pl.when(wj != 0)
+    def _acc():
+        sup_ref[0] = sup_ref[0] + partial
+
+    @pl.when(wj == nw - 1)
+    def _finish():
+        pop = sup_ref[0]
+        sup = pop if mode == MODE_TIDSET else supl_ref[q] - pop
+        sup_ref[0] = sup
+        mask_ref[0] = (sup >= msup_ref[0]).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_w", "interpret")
+)
+def fused_intersect_pairs(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup: jax.Array | int,
+    *,
+    mode: int = MODE_TIDSET,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+):
+    """(P, W) uint32 frontier x (Q,) int32 pair indices ->
+    ((Q, W) uint32 intersections, (Q,) int32 supports, (Q,) int32 mask).
+
+    ``min_sup`` is a traced operand (scalar prefetch), so sweeping the
+    threshold does not recompile; only ``mode`` and the block shape do.
+    W need not be a multiple of ``block_w``; the frontier is zero-padded
+    (zero words contribute zero popcount).
+    """
+    if bitmaps.ndim != 2:
+        raise ValueError(f"expected (P, W) frontier, got {bitmaps.shape}")
+    if left.shape != right.shape or left.shape != sup_left.shape:
+        raise ValueError("left/right/sup_left must share a (Q,) shape")
+    qn = left.shape[0]
+    p, w = bitmaps.shape
+    bw = min(block_w, max(w, 1))
+    pad_w = (-w) % bw
+    if pad_w:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad_w)))
+    wp = bitmaps.shape[1]
+
+    idx = jnp.stack([left.astype(jnp.int32), right.astype(jnp.int32)])
+    supl = sup_left.astype(jnp.int32)
+    msup = jnp.asarray(min_sup, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(qn, wp // bw),
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[0, q], j)),
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[1, q], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, *_: (q, j)),
+            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
+            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
+        ],
+    )
+    inter, sup, mask = pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(idx, supl, msup, bitmaps, bitmaps)
+    return inter[:, :w], sup, mask

@@ -1,0 +1,37 @@
+"""Dispatching wrapper: fused Pallas kernel on TPU, fused jnp path elsewhere.
+
+``repro.core.engine`` routes the pallas backend's pair batches through here,
+so the hot loop is kernel-backed on real hardware while staying exact (and a
+single fused XLA computation) on the CPU host used for tests/benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+
+from .fused_intersect import fused_intersect_pairs
+from .ref import fused_intersect_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_intersect(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup,
+    *,
+    mode: int,
+    interpret: bool | None = None,
+):
+    """Fused gather+AND+popcount+mask.  See kernel docstring for tiling."""
+    if interpret is None:
+        if _on_tpu():
+            return fused_intersect_pairs(bitmaps, left, right, sup_left,
+                                         min_sup, mode=mode)
+        return fused_intersect_ref(bitmaps, left, right, sup_left,
+                                   min_sup, mode=mode)
+    return fused_intersect_pairs(bitmaps, left, right, sup_left, min_sup,
+                                 mode=mode, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused gather-AND-popcount-mask kernel.
+
+Same contract as :func:`fused_intersect_pairs` (one XLA-fused jit, so it is
+also the production path on non-TPU backends): gather both parent rows,
+intersect in the requested mode, count supports, compare against ``min_sup``.
+``min_sup`` is traced — threshold sweeps hit the same executable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .fused_intersect import MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def fused_intersect_ref(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup: jax.Array | int,
+    *,
+    mode: int = MODE_TIDSET,
+):
+    """(P, W) x (Q,) -> ((Q, W) uint32, (Q,) int32 sup, (Q,) int32 mask)."""
+    a = jnp.take(bitmaps, left.astype(jnp.int32), axis=0)
+    b = jnp.take(bitmaps, right.astype(jnp.int32), axis=0)
+    if mode == MODE_TIDSET:
+        inter = jnp.bitwise_and(a, b)
+    elif mode == MODE_TID_TO_DIFF:
+        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
+    elif mode == MODE_DIFFSET:
+        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    pop = jax.lax.population_count(inter).astype(jnp.int32).sum(-1)
+    sup = pop if mode == MODE_TIDSET else sup_left.astype(jnp.int32) - pop
+    mask = (sup >= jnp.asarray(min_sup, jnp.int32)).astype(jnp.int32)
+    return inter, sup, mask

@@ -1,0 +1,203 @@
+"""Engine backend parity: every backend x mode x shape must be bit-exact.
+
+The jnp reference defines the semantics; the fused pallas path (both the
+dispatching jit and the real kernel under ``interpret=True``) and the sharded
+shard_map path must reproduce its survivor masks, supports, and bitmaps
+bit-for-bit — including empty, singleton, and non-multiple-of-block shapes.
+Full ``mine()`` runs must agree across backends for every variant v1-v6.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import EclatConfig, bruteforce_fim, mine
+from repro.core import engine as eng
+from repro.core.bitmap import popcount_np
+
+RNG = np.random.default_rng(42)
+
+MODES = [eng.MODE_TIDSET, eng.MODE_TID_TO_DIFF, eng.MODE_DIFFSET]
+
+
+def _mesh4():
+    from repro.dist.compat import make_mesh
+    return make_mesh((4,), ("data",))
+
+
+def _engine(backend):
+    if backend == "jnp":
+        return eng.make_engine("jnp", bucket_min=8)
+    if backend == "pallas":
+        return eng.make_engine("pallas", bucket_min=8)
+    if backend == "pallas-kernel":
+        return eng.make_engine("pallas", bucket_min=8, interpret=True)
+    if backend == "sharded-jnp":
+        return eng.make_engine("sharded", mesh=_mesh4(), bucket_min=8, inner="jnp")
+    if backend == "sharded-pallas-kernel":
+        return eng.make_engine("sharded", mesh=_mesh4(), bucket_min=8,
+                               inner="pallas", interpret=True)
+    raise AssertionError(backend)
+
+
+def _oracle(bitmaps, left, right, sup_left, mode, min_sup):
+    a = bitmaps[left]
+    b = bitmaps[right]
+    if mode == eng.MODE_TIDSET:
+        inter = a & b
+        sup = popcount_np(inter).sum(-1)
+    elif mode == eng.MODE_TID_TO_DIFF:
+        inter = a & ~b
+        sup = sup_left - popcount_np(inter).sum(-1)
+    else:
+        inter = b & ~a
+        sup = sup_left - popcount_np(inter).sum(-1)
+    mask = sup >= min_sup
+    return inter[mask], sup[mask], mask
+
+
+def _case(p, w, q, seed):
+    rng = np.random.default_rng(seed)
+    bitmaps = rng.integers(0, 2**32, (p, w), dtype=np.uint32)
+    left = rng.integers(0, p, q).astype(np.int32)
+    right = rng.integers(0, p, q).astype(np.int32)
+    sup_left = popcount_np(bitmaps[left]).sum(-1).astype(np.int32) if q else np.zeros(0, np.int32)
+    dev = rng.integers(0, 4, q).astype(np.int64)
+    return bitmaps, left, right, sup_left, dev
+
+
+# interpret-mode pallas is slow; keep its shapes small but still cover the
+# empty / singleton / non-multiple-of-block corners
+SHAPES_FAST = [(1, 1, 0), (1, 1, 1), (5, 3, 13), (64, 4, 37), (130, 9, 21)]
+SHAPES_INTERP = [(1, 1, 0), (1, 1, 1), (5, 3, 13), (9, 5, 7)]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded-jnp"])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("p,w,q", SHAPES_FAST)
+def test_backend_parity(backend, mode, p, w, q):
+    bitmaps, left, right, sup_left, dev = _case(p, w, q, seed=p * 1000 + w * 10 + q)
+    min_sup = max(1, int(0.4 * w * 32))
+    ref_bm, ref_sup, ref_mask = _oracle(bitmaps, left, right, sup_left, mode, min_sup)
+    e = _engine(backend)
+    res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                   mode=mode, min_sup=min_sup, device_of_pair=dev)
+    np.testing.assert_array_equal(res.mask, ref_mask)
+    np.testing.assert_array_equal(res.supports, ref_sup)
+    np.testing.assert_array_equal(np.asarray(res.bitmaps), ref_bm)
+
+
+@pytest.mark.parametrize("backend", ["pallas-kernel", "sharded-pallas-kernel"])
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("p,w,q", SHAPES_INTERP)
+def test_pallas_kernel_parity(backend, mode, p, w, q):
+    """The real Pallas kernel (interpret=True on this CPU host) is bit-exact."""
+    bitmaps, left, right, sup_left, dev = _case(p, w, q, seed=p * 77 + w * 5 + q)
+    min_sup = max(1, int(0.4 * w * 32))
+    ref_bm, ref_sup, ref_mask = _oracle(bitmaps, left, right, sup_left, mode, min_sup)
+    e = _engine(backend)
+    res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                   mode=mode, min_sup=min_sup, device_of_pair=dev)
+    np.testing.assert_array_equal(res.mask, ref_mask)
+    np.testing.assert_array_equal(res.supports, ref_sup)
+    np.testing.assert_array_equal(np.asarray(res.bitmaps), ref_bm)
+
+
+def test_kernel_multi_word_blocks():
+    """W spanning several word blocks exercises the popcount accumulator."""
+    from repro.kernels.fused_intersect import (fused_intersect_pairs,
+                                               fused_intersect_ref)
+    bitmaps, left, right, sup_left, _ = _case(12, 300, 6, seed=5)
+    bm = jnp.asarray(bitmaps)
+    l, r, s = jnp.asarray(left), jnp.asarray(right), jnp.asarray(sup_left)
+    for mode in MODES:
+        ri, rs, rm = fused_intersect_ref(bm, l, r, s, 900, mode=mode)
+        ki, ks, km = fused_intersect_pairs(bm, l, r, s, 900, mode=mode,
+                                           block_w=128, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ri), np.asarray(ki))
+        np.testing.assert_array_equal(np.asarray(rs), np.asarray(ks))
+        np.testing.assert_array_equal(np.asarray(rm), np.asarray(km))
+
+
+# ---------------------------------------------------------------------------
+# full mine() parity across backends
+# ---------------------------------------------------------------------------
+
+def _db(seed=7, n_items=10, n_txn=150):
+    rng = np.random.default_rng(seed)
+    txns = []
+    for _ in range(n_txn):
+        t = set(rng.choice(n_items, size=rng.integers(3, 7), replace=False).tolist())
+        if rng.random() < 0.5:
+            t |= {0, 1, 2, 3}
+        txns.append(sorted(t))
+    return txns
+
+
+DB = _db()
+ORACLE = bruteforce_fim(DB, min_sup=25)
+
+
+@pytest.mark.parametrize("variant", ["v1", "v2", "v3", "v4", "v5", "v6"])
+def test_mine_backend_parity(variant):
+    maps = {}
+    for backend in ("jnp", "pallas"):
+        res = mine(DB, 10, EclatConfig(min_sup=25, variant=variant, p=3,
+                                       use_diffsets=(variant == "v6"),
+                                       backend=backend, bucket_min=32))
+        assert res.stats["backend"] == backend
+        maps[backend] = res.support_map()
+    assert maps["jnp"] == maps["pallas"] == ORACLE
+
+
+def test_mine_no_trimatrix_backend_parity():
+    r_jnp = mine(DB, 10, EclatConfig(min_sup=25, variant="v5", p=3,
+                                     tri_matrix=False, backend="jnp"))
+    r_pal = mine(DB, 10, EclatConfig(min_sup=25, variant="v5", p=3,
+                                     tri_matrix=False, backend="pallas"))
+    assert r_jnp.support_map() == r_pal.support_map() == ORACLE
+
+
+def test_mine_mesh_routes_to_sharded():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v4", p=4), mesh=_mesh4())
+    assert res.stats["backend"] == "sharded"
+    assert res.support_map() == ORACLE
+    assert "device_balance" in res.stats
+
+
+def test_mine_legacy_batched_alias():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v4", p=3, backend="batched"))
+    assert res.stats["backend"] == "pallas"
+    assert res.support_map() == ORACLE
+
+
+# ---------------------------------------------------------------------------
+# registry + bucket ladder
+# ---------------------------------------------------------------------------
+
+def test_registry_surface():
+    assert set(eng.available_backends()) >= {"jnp", "pallas", "sharded"}
+    with pytest.raises(ValueError, match="unknown engine backend"):
+        eng.make_engine("nope")
+    with pytest.raises(ValueError, match="requires a mesh"):
+        eng.make_engine("sharded")
+
+
+def test_pair_buffers_ladder_reuse():
+    bufs = eng.PairBuffers(floor=8)
+    qb1, l1, _, _ = bufs.fill(np.arange(5, dtype=np.int32),
+                              np.arange(5, dtype=np.int32),
+                              np.arange(5, dtype=np.int32))
+    assert qb1 == 8 and l1.shape == (8,) and (l1[5:] == 0).all()
+    # stale tail from a previous, larger fill must be rezeroed
+    qb2, l2, _, _ = bufs.fill(np.full(3, 7, np.int32),
+                              np.full(3, 7, np.int32),
+                              np.full(3, 7, np.int32))
+    assert qb2 == 8 and l2 is l1 and (l2[3:] == 0).all()
+    qb3, l3, _, _ = bufs.fill(np.zeros(20, np.int32),
+                              np.zeros(20, np.int32),
+                              np.zeros(20, np.int32))
+    assert qb3 == 32 and l3.shape == (32,) and l3 is not l1
+
+
+def test_bucket_size_ladder():
+    assert [eng.bucket_size(n, 8) for n in (0, 1, 8, 9, 100)] == [8, 8, 8, 16, 128]
