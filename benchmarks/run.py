@@ -8,12 +8,13 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   partitioner_balance  §4.5 extension: padding efficiency per partitioner
   kernel_microbench    kernels: popcount-support / trimatrix / containment
   engine               core.engine backend trajectory -> BENCH_engine.json
+  streaming            incremental vs full window re-mine -> BENCH_streaming.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
 paper-complete sweep, BENCH_ONLY=<name> to run a single table.
-CLI: ``--smoke`` runs only the engine table at a CI-sized scale (still
-writes BENCH_engine.json); ``--only <name>`` mirrors BENCH_ONLY.
+CLI: ``--smoke`` runs the engine + streaming tables at a CI-sized scale
+(still writes both BENCH json files); ``--only <name>`` mirrors BENCH_ONLY.
 """
 import argparse
 import functools
@@ -28,6 +29,7 @@ from benchmarks.engine_bench import engine_bench
 from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
 from benchmarks.micro import kernel_microbench, moe_balance
+from benchmarks.streaming_bench import streaming_bench
 
 TABLES = {
     "fim_minsup": fim_minsup,
@@ -36,6 +38,7 @@ TABLES = {
     "partitioner_balance": partitioner_balance,
     "kernel_microbench": kernel_microbench,
     "engine": engine_bench,
+    "streaming": streaming_bench,
     "moe_balance": moe_balance,
 }
 
@@ -48,7 +51,10 @@ def main() -> None:
                     help="run a single table by name")
     args = ap.parse_args()
 
-    tables = {"engine": functools.partial(engine_bench, smoke=True)} if args.smoke else TABLES
+    tables = {
+        "engine": functools.partial(engine_bench, smoke=True),
+        "streaming": functools.partial(streaming_bench, smoke=True),
+    } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
     for name, fn in tables.items():
         if args.only and name != args.only:

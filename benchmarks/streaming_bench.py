@@ -1,0 +1,127 @@
+"""Streaming re-mine latency: incremental window slides vs full re-mining.
+
+    python benchmarks/streaming_bench.py [--smoke]   # or benchmarks/run.py
+
+For each window size, a T10-style micro-batch stream fills the window, then
+steady-state slides are timed two ways over the *same* window contents:
+
+  incremental  ``StreamingMiner.advance`` — block-delta state update + active
+               class re-expansion (the repro.streaming path)
+  full         batch ``mine()`` from the raw window transactions (repack,
+               full supports, full tri-matrix — what a non-incremental
+               deployment re-runs per slide)
+
+Both run the same engine backend with warmed jit/bucket caches, and every
+timed slide asserts the two support maps are identical, so the speedup is a
+like-for-like measure of the incremental state maintenance (DESIGN.md §5).
+Writes ``BENCH_streaming.json`` for the cross-PR trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import List
+
+import numpy as np
+
+if __name__ == "__main__":      # standalone run: make `repro` importable
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import EclatConfig, mine
+from repro.data import stream_spec, transaction_stream
+from repro.streaming import StreamConfig, StreamingMiner
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_streaming.json")
+DATASET = "T10I4D100K"
+
+
+def _row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.0f},{derived}"
+
+
+def _measure_window(n_blocks: int, block_txns: int, min_sup: float,
+                    backend: str, n_slides: int) -> dict:
+    spec = stream_spec(DATASET)
+    cfg = StreamConfig(min_sup=min_sup, n_blocks=n_blocks,
+                       block_txns=block_txns, backend=backend)
+    miner = StreamingMiner(spec.n_items, cfg)
+    batches = list(transaction_stream(DATASET, block_txns,
+                                      n_blocks + 2 + n_slides, seed=1))
+    for b in batches[:n_blocks]:          # fill the window
+        miner.advance(b)
+    bcfg = EclatConfig(min_sup=min_sup, variant="v4", backend=backend)
+    # warm both paths (jit caches, bucket ladders) on two live slides
+    for b in batches[n_blocks: n_blocks + 2]:
+        miner.advance(b)
+        mine(miner.window_transactions(), spec.n_items, bcfg)
+
+    t_inc: List[float] = []
+    t_full: List[float] = []
+    itemsets = 0
+    for b in batches[n_blocks + 2:]:
+        t0 = time.perf_counter()
+        inc_res = miner.advance(b)
+        t_inc.append(time.perf_counter() - t0)
+        window = miner.window_transactions()
+        t0 = time.perf_counter()
+        full_res = mine(window, spec.n_items, bcfg)
+        t_full.append(time.perf_counter() - t0)
+        assert inc_res.support_map() == full_res.support_map(), \
+            "incremental/full divergence — bench aborted"
+        itemsets = inc_res.total
+    inc_ms = float(np.mean(t_inc) * 1e3)
+    full_ms = float(np.mean(t_full) * 1e3)
+    return {
+        "n_blocks": n_blocks,
+        "block_txns": block_txns,
+        "window_txns": miner.ring.n_txn,
+        "n_slides": len(t_inc),
+        "itemsets": itemsets,
+        "incremental_ms": inc_ms,
+        "full_ms": full_ms,
+        "speedup": full_ms / inc_ms if inc_ms > 0 else 0.0,
+        "results_identical": True,
+    }
+
+
+def streaming_bench(out: List[str], smoke: bool = False) -> dict:
+    import jax
+
+    block_txns = 512
+    windows = (4, 8) if smoke else (4, 8, 16, 32)
+    n_slides = 3 if smoke else 6
+    min_sup = 0.01
+    report: dict = {
+        "dataset": DATASET, "min_sup": min_sup, "smoke": bool(smoke),
+        "backend": "pallas", "jax_backend": jax.default_backend(),
+        "windows": [],
+    }
+    for n_blocks in windows:
+        entry = _measure_window(n_blocks, block_txns, min_sup,
+                                backend="pallas", n_slides=n_slides)
+        report["windows"].append(entry)
+        out.append(_row(
+            f"streaming/w{entry['window_txns']}/incremental",
+            entry["incremental_ms"] / 1e3,
+            f"full_ms={entry['full_ms']:.1f};speedup=x{entry['speedup']:.2f};"
+            f"itemsets={entry['itemsets']}"))
+    report["min_speedup"] = min(w["speedup"] for w in report["windows"])
+    with open(BENCH_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    out.append(_row("streaming/min_speedup", 0.0,
+                    f"x{report['min_speedup']:.2f};json={os.path.basename(BENCH_PATH)}"))
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized window sweep (still writes BENCH_streaming.json)")
+    args = ap.parse_args()
+    rows: List[str] = ["name,us_per_call,derived"]
+    streaming_bench(rows, smoke=args.smoke)
+    print("\n".join(rows))

@@ -1,0 +1,117 @@
+"""Docs-integrity gate: no dangling DESIGN.md §N citations, no [[...]]
+placeholder refs, no broken intra-repo markdown links.
+
+    python scripts/check_docs.py          # exit 1 + report on any violation
+
+Run by CI and by tests/test_docs_integrity.py.  History: ~12 source files
+cited "DESIGN.md §4"/"§5" while DESIGN.md ended at §3; this gate keeps
+citations from rotting again.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import List, Tuple
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude", "node_modules",
+             "reports"}
+
+# "DESIGN.md §4", "DESIGN §4", "[DESIGN.md](DESIGN.md) §2", "DESIGN.md §2-3"
+SECTION_REF = re.compile(r"DESIGN[^\n§]{0,12}§(\d+)(?:-(\d+))?")
+WIKI_REF = re.compile(r"\[\[[^\]\n]+\]\]")
+MD_LINK = re.compile(r"\[[^][\n]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^(```|~~~).*?^\1\s*$", re.S | re.M)
+INLINE_CODE = re.compile(r"`[^`\n]*`")
+
+
+def _repo_files(exts: Tuple[str, ...]) -> List[str]:
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(exts):
+                out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def design_sections() -> set:
+    with open(os.path.join(ROOT, "DESIGN.md")) as f:
+        return {int(m.group(1)) for m in re.finditer(r"^## §(\d+)", f.read(), re.M)}
+
+
+def _strip_code(text: str) -> str:
+    """Blank out fenced blocks (newline-preserving, so reported line numbers
+    stay correct) and inline code spans."""
+    blanked = FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), text)
+    return INLINE_CODE.sub("", blanked)
+
+
+def check_section_refs() -> List[str]:
+    """Every `DESIGN.md §N` (or §N-M range) must resolve to a `## §N`."""
+    known = design_sections()
+    errors = []
+    for path in _repo_files((".py", ".md")):
+        rel = os.path.relpath(path, ROOT)
+        with open(path, errors="replace") as f:
+            text = f.read()
+        for m in SECTION_REF.finditer(text):
+            lo = int(m.group(1))
+            hi = int(m.group(2)) if m.group(2) else lo
+            for sec in range(lo, hi + 1):
+                if sec not in known:
+                    line = text[: m.start()].count("\n") + 1
+                    errors.append(f"{rel}:{line}: cites DESIGN.md §{sec} "
+                                  f"but DESIGN.md has no '## §{sec}'")
+    return errors
+
+
+def check_wiki_refs() -> List[str]:
+    """[[...]] section placeholders in markdown are always dangling."""
+    errors = []
+    for path in _repo_files((".md",)):
+        rel = os.path.relpath(path, ROOT)
+        text = _strip_code(open(path, errors="replace").read())
+        for m in WIKI_REF.finditer(text):
+            line = text[: m.start()].count("\n") + 1
+            errors.append(f"{rel}:{line}: dangling section placeholder "
+                          f"{m.group(0)}")
+    return errors
+
+
+def check_md_links() -> List[str]:
+    """Relative markdown link targets must exist in the repo."""
+    errors = []
+    for path in _repo_files((".md",)):
+        rel = os.path.relpath(path, ROOT)
+        text = _strip_code(open(path, errors="replace").read())
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), target.split("#", 1)[0]))
+            if not os.path.exists(resolved):
+                line = text[: m.start()].count("\n") + 1
+                errors.append(f"{rel}:{line}: broken link -> {target}")
+    return errors
+
+
+def run_all() -> List[str]:
+    return check_section_refs() + check_wiki_refs() + check_md_links()
+
+
+def main() -> int:
+    errors = run_all()
+    for e in errors:
+        print(f"docs-integrity: {e}", file=sys.stderr)
+    if errors:
+        print(f"docs-integrity: {len(errors)} violation(s)", file=sys.stderr)
+        return 1
+    print("docs-integrity: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

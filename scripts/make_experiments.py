@@ -8,8 +8,9 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.analysis.report import (dryrun_table, load_reports, perf_log_table,
-                                   roofline_table)
+from repro.analysis.report import (dryrun_table, fim_table, load_bench,
+                                   load_reports, perf_log_table,
+                                   roofline_table, streaming_table)
 
 HEADER = """# EXPERIMENTS
 
@@ -52,15 +53,26 @@ def main():
     reports = load_reports()
     parts = [HEADER]
 
-    parts.append("\n## §Dry-run (compile proof, memory, collective schedule)\n")
-    parts.append(
-        "Every non-skipped cell below compiled successfully on its mesh.  "
-        "Skips are the assignment-sanctioned long_500k exclusions "
-        "(DESIGN.md §4).\n")
-    parts.append(dryrun_table(reports))
+    engine = load_bench("BENCH_engine.json")
+    if engine:
+        parts.append("\n## §FIM engine (batch mining backends, CPU wall-clock)\n")
+        parts.append(fim_table(engine))
 
-    parts.append("\n\n## §Roofline (single-pod, per arch x shape)\n")
-    parts.append(roofline_table(reports, mesh="single"))
+    streaming = load_bench("BENCH_streaming.json")
+    if streaming:
+        parts.append("\n\n## §Streaming (sliding-window incremental vs full re-mine)\n")
+        parts.append(streaming_table(streaming))
+
+    if reports:
+        parts.append("\n\n## §Dry-run (compile proof, memory, collective schedule)\n")
+        parts.append(
+            "Every non-skipped cell below compiled successfully on its mesh.  "
+            "Skips are the assignment-sanctioned long_500k exclusions "
+            "(DESIGN.md §4).\n")
+        parts.append(dryrun_table(reports))
+
+        parts.append("\n\n## §Roofline (single-pod, per arch x shape)\n")
+        parts.append(roofline_table(reports, mesh="single"))
 
     if os.path.exists("reports/perf_log.json"):
         with open("reports/perf_log.json") as f:

@@ -1,4 +1,5 @@
-"""EXPERIMENTS.md §Dry-run / §Roofline table generation from reports/."""
+"""EXPERIMENTS.md table generation: §Dry-run / §Roofline from reports/,
+§FIM engine from BENCH_engine.json, §Streaming from BENCH_streaming.json."""
 from __future__ import annotations
 
 import glob
@@ -6,7 +7,8 @@ import json
 import os
 from typing import Dict, List, Optional
 
-__all__ = ["load_reports", "roofline_table", "dryrun_table", "perf_log_table"]
+__all__ = ["load_reports", "load_bench", "roofline_table", "dryrun_table",
+           "perf_log_table", "fim_table", "streaming_table"]
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -126,6 +128,59 @@ def dryrun_table(reports: List[dict]) -> str:
             f"{r['compile_s']:.0f} | {r['memory']['peak_gb']:.2f} | "
             f"{r['memory']['argument_gb']:.2f} | {r['memory']['temp_gb']:.2f} | "
             f"{colls} | {r['wire_bytes_per_device']/1e9:.2f} |")
+    return "\n".join(rows)
+
+
+def load_bench(path: str) -> Optional[dict]:
+    """One recorded BENCH_*.json artifact, or None if absent."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def fim_table(bench: dict) -> str:
+    """Markdown: per-backend mining trajectory out of BENCH_engine.json."""
+    rows = [
+        f"Dataset {bench['dataset']} x{bench['scale']} "
+        f"({bench['n_txn']} txns, {bench['n_items']} items), "
+        f"min_sup={bench['min_sup']}, jax backend `{bench['jax_backend']}`"
+        + (", smoke scale.\n" if bench.get("smoke") else ".\n"),
+        "| backend | executed path | mine wall | itemsets | intersections/s | "
+        "padding eff | micro pairs/s |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for name, b in bench["backends"].items():
+        rows.append(
+            f"| {name} | {b['executed_path']} | {b['mine_wall_s']*1e3:.1f}ms | "
+            f"{b['itemsets']} | {b['intersections_per_s']:.0f} | "
+            f"{b['padding_efficiency']:.3f} | {b['micro_pairs_per_s']:.0f} |")
+    rows.append(f"\nFused speedup vs jnp reference: "
+                f"**{bench['fused_speedup_vs_jnp']:.2f}x**")
+    return "\n".join(rows)
+
+
+def streaming_table(bench: dict) -> str:
+    """Markdown: incremental vs full re-mine latency (BENCH_streaming.json)."""
+    rows = [
+        f"Sliding {bench['dataset']} stream, min_sup={bench['min_sup']}, "
+        f"backend `{bench['backend']}`; every timed slide asserts the "
+        "incremental and full support maps are identical"
+        + (" (smoke scale).\n" if bench.get("smoke") else ".\n"),
+        "| window (txns) | blocks | slides | itemsets | incremental/slide | "
+        "full re-mine/slide | speedup |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for w in bench["windows"]:
+        rows.append(
+            f"| {w['window_txns']} | {w['n_blocks']}x{w['block_txns']} | "
+            f"{w['n_slides']} | {w['itemsets']} | {w['incremental_ms']:.1f}ms | "
+            f"{w['full_ms']:.1f}ms | x{w['speedup']:.2f} |")
+    note = (" (incremental wins everywhere it is measured)"
+            if bench["min_speedup"] > 1.0 else
+            " (**regression: incremental loses at some window size**)")
+    rows.append(f"\nMinimum speedup across window sizes: "
+                f"**x{bench['min_speedup']:.2f}**{note}.")
     return "\n".join(rows)
 
 

@@ -1,7 +1,7 @@
 """grok-1-314b [moe]: 64L d6144 48H GQA(kv=8) d_ff 32768, MoE 8 experts
 top-2, vocab 131072 [hf:xai-org/grok-1; unverified].  8 experts don't divide
 the 16-wide EP axis -> expert_sharding=tp2d (each expert's 32k d_ff sharded
-over data x model; DESIGN.md §5).  long_500k skipped."""
+over data x model; DESIGN.md §2).  long_500k skipped."""
 from . import register
 from .base import ModelConfig
 

@@ -39,7 +39,8 @@ from .partitioners import assign_partitions, partition_stats
 from .triangular import cooccurrence_counts, frequent_pairs
 from .vertical import VerticalDB, build_vertical, filter_transactions, filtering_reduction
 
-__all__ = ["EclatConfig", "EclatResult", "mine", "VARIANTS"]
+__all__ = ["EclatConfig", "EclatResult", "mine", "resolve_min_sup",
+           "run_bottom_up", "VARIANTS"]
 
 VARIANTS: Dict[str, dict] = {
     "v1": dict(filter_txns=False, accumulator=False, partitioner="default"),
@@ -49,6 +50,18 @@ VARIANTS: Dict[str, dict] = {
     "v5": dict(filter_txns=True, accumulator=True, partitioner="reverse_hash"),
     "v6": dict(filter_txns=True, accumulator=True, partitioner="greedy"),
 }
+
+
+def resolve_min_sup(min_sup: float, n_txn: int) -> int:
+    """Fraction (<1, of ``n_txn``) or absolute count (>=1) -> absolute count.
+
+    Shared by the batch and streaming configs: the streaming/batch
+    bit-exactness contract (DESIGN.md §5) requires both to resolve a
+    fractional threshold identically.
+    """
+    if min_sup >= 1:
+        return int(min_sup)
+    return max(1, int(math.ceil(min_sup * n_txn)))
 
 
 @dataclasses.dataclass
@@ -67,9 +80,7 @@ class EclatConfig:
     checkpoint_every_level: bool = False
 
     def resolve_min_sup(self, n_txn: int) -> int:
-        if self.min_sup >= 1:
-            return int(self.min_sup)
-        return max(1, int(math.ceil(self.min_sup * n_txn)))
+        return resolve_min_sup(self.min_sup, n_txn)
 
 
 @dataclasses.dataclass
@@ -93,29 +104,62 @@ class EclatResult:
         return self.store.support_map()
 
 
-def _resolve_engine(config: EclatConfig, mesh: Optional[jax.sharding.Mesh]) -> eng.Engine:
-    """Map (config.backend, mesh) onto an engine instance.
-
-    A mesh always means the sharded backend (the paper's executor mapping),
-    with the single-device backend as its inner executor; ``"batched"`` is
-    the legacy alias for the single-device default (pallas).
-    """
-    backend = config.backend
-    if backend in ("batched", "auto"):
-        backend = "pallas"
-    if mesh is not None or backend == "sharded":
-        if mesh is None:
-            backend = "pallas"      # sharded without a mesh degrades gracefully
-        else:
-            inner = backend if backend in ("jnp", "pallas") else "pallas"
-            return eng.make_engine("sharded", mesh=mesh,
-                                   bucket_min=config.bucket_min, inner=inner)
-    return eng.make_engine(backend, bucket_min=config.bucket_min)
-
-
 # ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
+
+def run_bottom_up(
+    execu: eng.Engine,
+    store: ItemsetStore,
+    lvl_bitmaps: jax.Array,
+    class_id: np.ndarray,
+    item_rank: np.ndarray,
+    partition: np.ndarray,
+    support: np.ndarray,
+    *,
+    abs_min_sup: int,
+    mode: int,
+    max_k: int,
+    part_to_dev: np.ndarray,
+    on_level=None,
+) -> None:
+    """Levels >= 3: per-class level-wise expansion (the paper's Phase-4).
+
+    One shared loop drives both the batch miner and the streaming miner —
+    the streaming/batch bit-exactness contract (DESIGN.md §5) depends on
+    the survivor bookkeeping below staying identical, so it exists once.
+    Starts from a level-2 frontier (``class_id``/``item_rank``/``partition``/
+    ``support`` row-aligned with ``lvl_bitmaps``) and appends one
+    ``LevelRecord`` per surviving level; ``on_level`` (checkpointing) sees
+    every new frontier.
+    """
+    k = 2
+    while support.shape[0] and k < max_k:
+        starts, sizes = class_segments(class_id)
+        left, right = segment_pairs(starts, sizes)
+        if left.size == 0:
+            break
+        res = execu.expand(
+            lvl_bitmaps, left.astype(np.int32), right.astype(np.int32),
+            support[left].astype(np.int32),
+            mode=mode, min_sup=abs_min_sup,
+            device_of_pair=part_to_dev[partition[left]],
+        )
+        k += 1
+        if not res.mask.any():
+            break
+        sel = np.nonzero(res.mask)[0]
+        parent = left[sel]
+        item_rank = item_rank[right[sel]]
+        class_id = left[sel]
+        partition = partition[left[sel]]
+        support = res.supports
+        store.add_level(LevelRecord(k=k, parent=parent, item_rank=item_rank,
+                                    support=support, partition=partition))
+        lvl_bitmaps = res.bitmaps
+        if on_level is not None:
+            on_level(k, class_id, item_rank, partition, support, lvl_bitmaps)
+
 
 def _build_db(transactions, n_items, abs_min_sup, spec, mesh) -> Tuple[VerticalDB, dict]:
     info: dict = {}
@@ -164,7 +208,7 @@ def mine(
     est = pair_work(sizes1 + 1, w)  # +1: member count of class r is n1-1-r
     eff_p = config.p if spec["partitioner"] in ("hash", "reverse_hash", "greedy") else max(n_classes, 1)
     table = assign_partitions(n_classes, spec["partitioner"], eff_p, work=est)
-    execu = _resolve_engine(config, mesh)
+    execu = eng.resolve_engine(config.backend, mesh, bucket_min=config.bucket_min)
     stats["backend"] = execu.name
     # partition -> device round robin (sharded backend only)
     part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
@@ -222,7 +266,9 @@ def mine(
             if res.mask.any():
                 keep_i.append(ic[res.mask]); keep_j.append(jc[res.mask])
                 keep_s.append(res.supports.astype(np.int32))
-                keep_bm.append(res.bitmaps)
+                # chunks are concatenated into one frontier: strip the
+                # engine's rung padding so survivor rows stay contiguous
+                keep_bm.append(res.bitmaps[: int(res.mask.sum())])
         if keep_i:
             iu = np.concatenate(keep_i).astype(np.int64)
             ju = np.concatenate(keep_j).astype(np.int64)
@@ -243,37 +289,22 @@ def mine(
 
     # ---- Phase 3/4: level-wise Bottom-Up -----------------------------------
     t0 = time.perf_counter()
-    k = 2
-    max_k = config.max_k or n1
     mode_k = eng.MODE_DIFFSET if diffsets else eng.MODE_TIDSET
-    while support.shape[0] and k < max_k:
-        starts, sizes = class_segments(class_id)
-        left, right = segment_pairs(starts, sizes)
-        if left.size == 0:
-            break
-        res = execu.expand(
-            lvl_bitmaps, left.astype(np.int32), right.astype(np.int32),
-            support[left].astype(np.int32),
-            mode=mode_k, min_sup=abs_min_sup,
-            device_of_pair=part_to_dev[partition[left]],
-        )
-        k += 1
-        if not res.mask.any():
-            break
-        sel = np.nonzero(res.mask)[0]
-        parent = left[sel]
-        item_rank_new = item_rank[right[sel]]
-        class_id_new = left[sel]
-        partition_new = partition[left[sel]]
-        support_new = res.supports
-        store.add_level(LevelRecord(k=k, parent=parent, item_rank=item_rank_new,
-                                    support=support_new, partition=partition_new))
-        lvl_bitmaps = res.bitmaps
-        item_rank, class_id, partition, support = item_rank_new, class_id_new, partition_new, support_new
-        if config.checkpoint_dir and config.checkpoint_every_level:
-            from .lineage import save_mining_checkpoint
+
+    on_level = None
+    if config.checkpoint_dir and config.checkpoint_every_level:
+        from .lineage import save_mining_checkpoint
+
+        def on_level(k, class_id, item_rank, partition, support, lvl_bitmaps):
+            # slice the rung padding off on device before the host transfer
             save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
-                                   item_rank, partition, support, np.asarray(lvl_bitmaps))
+                                   item_rank, partition, support,
+                                   np.asarray(lvl_bitmaps[: support.shape[0]]))
+
+    run_bottom_up(execu, store, lvl_bitmaps, class_id, item_rank, partition,
+                  support, abs_min_sup=abs_min_sup, mode=mode_k,
+                  max_k=config.max_k or n1, part_to_dev=part_to_dev,
+                  on_level=on_level)
     stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
 
     # ---- balance bookkeeping ----------------------------------------------

@@ -48,7 +48,7 @@ from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
     "LevelResult", "Engine", "JnpEngine", "PallasEngine", "ShardedEngine",
-    "register_backend", "available_backends", "make_engine",
+    "register_backend", "available_backends", "make_engine", "resolve_engine",
 ]
 
 
@@ -62,8 +62,14 @@ class LevelResult:
 
     mask:     (Q,) bool — which input pairs survived, in input pair order.
     supports: (S,) int64 — supports of the survivors (S = mask.sum()).
-    bitmaps:  (S, W) uint32 device array — survivor tidsets/diffsets,
-              compacted on device.
+    bitmaps:  (Sb, W) uint32 device array — survivor tidsets/diffsets,
+              compacted on device into a power-of-two row rung Sb >= S.
+              Rows [:S] are the survivors in mask order; rows [S:] are
+              padding (duplicates of row 0) and must not be read.  Padding
+              the compaction keeps device shapes on the same bucket ladder
+              as the pair batches, so steady-state mining (and every window
+              slide of the streaming miner) reuses compiled executables
+              instead of recompiling per survivor count.
     """
 
     mask: np.ndarray
@@ -152,6 +158,33 @@ def make_engine(
     return cls(bucket_min=bucket_min)
 
 
+def resolve_engine(
+    backend: str,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    *,
+    bucket_min: int = 1024,
+) -> "Engine":
+    """Map a (backend name, mesh) request onto an engine instance.
+
+    A mesh always means the sharded backend (the paper's executor mapping),
+    with the named single-device backend as its inner executor; ``"batched"``
+    and ``"auto"`` are legacy aliases for the single-device default (pallas).
+    ``"sharded"`` without a mesh degrades gracefully to that default.  Both
+    the batch driver (``core.eclat.mine``) and the streaming miner
+    (``repro.streaming``) resolve their executors here.
+    """
+    if backend in ("batched", "auto"):
+        backend = "pallas"
+    if mesh is not None or backend == "sharded":
+        if mesh is None:
+            backend = "pallas"
+        else:
+            inner = backend if backend in ("jnp", "pallas") else "pallas"
+            return make_engine("sharded", mesh=mesh, bucket_min=bucket_min,
+                               inner=inner)
+    return make_engine(backend, bucket_min=bucket_min)
+
+
 class Engine:
     """Backend interface + shared accounting."""
 
@@ -185,14 +218,31 @@ class Engine:
                            supports=np.zeros(0, np.int64),
                            bitmaps=jnp.zeros((0, w), jnp.uint32))
 
-    def stats(self) -> dict:
+    def _compact(self, block: jax.Array, sel: np.ndarray) -> jax.Array:
+        """Gather survivor rows ``sel`` out of ``block``, padded to a
+        power-of-two rung (pad slots gather row 0) so the device gather and
+        every downstream expansion see ladder shapes, not raw counts."""
+        sb = bucket_size(max(int(sel.shape[0]), 1), self.buffers.floor)
+        idx = np.zeros(sb, np.int32)
+        idx[:sel.shape[0]] = sel
+        return _take_rows(block, jnp.asarray(idx))
+
+    def snapshot(self) -> Tuple[int, int, int]:
+        """Counter snapshot, for per-call deltas on a long-lived engine
+        (``stats(since=snapshot)`` — the streaming miner reports per-slide
+        work, not lifetime totals)."""
+        return (self.n_intersections, self.n_padded,
+                len(self.device_pair_counts))
+
+    def stats(self, since: Optional[Tuple[int, int, int]] = None) -> dict:
+        i0, p0, d0 = since if since is not None else (0, 0, 0)
         out = {
             "backend": self.name,
-            "n_intersections": self.n_intersections,
-            "n_padded": self.n_padded,
+            "n_intersections": self.n_intersections - i0,
+            "n_padded": self.n_padded - p0,
         }
-        if self.device_pair_counts:
-            per_dev = np.sum(self.device_pair_counts, axis=0)
+        if self.device_pair_counts[d0:]:
+            per_dev = np.sum(self.device_pair_counts[d0:], axis=0)
             out["device_balance"] = {
                 "pairs_per_device": per_dev.tolist(),
                 "padding_efficiency": float(
@@ -229,10 +279,9 @@ class JnpEngine(Engine):
         sup_np = np.asarray(sup)[:q]
         mask = sup_np >= min_sup
         sel = np.nonzero(mask)[0]
-        surv = _take_rows(out, jnp.asarray(sel, jnp.int32))
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
-                           bitmaps=surv)
+                           bitmaps=self._compact(out, sel))
 
 
 # ---------------------------------------------------------------------------
@@ -265,10 +314,9 @@ class PallasEngine(Engine):
         mask = np.asarray(mask_dev)[:q].astype(bool)
         sup_np = np.asarray(sup)[:q]
         sel = np.nonzero(mask)[0]
-        surv = _take_rows(inter, jnp.asarray(sel, jnp.int32))
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
-                           bitmaps=surv)
+                           bitmaps=self._compact(inter, sel))
 
 
 # ---------------------------------------------------------------------------
@@ -354,8 +402,8 @@ class ShardedEngine(Engine):
         sup_np = np.asarray(sup).reshape(-1)[slot_of_pair]
         mask = sup_np >= min_sup
         sel = np.nonzero(mask)[0]
-        surv = _take_rows(out.reshape(d * qmax, -1),
-                          jnp.asarray(slot_of_pair[sel], jnp.int32))
+        surv = self._compact(out.reshape(d * qmax, -1),
+                             slot_of_pair[sel].astype(np.int32))
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
                            bitmaps=surv)

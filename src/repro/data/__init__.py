@@ -1,7 +1,10 @@
-"""repro.data — transaction generators (paper datasets) + LM token pipeline."""
+"""repro.data — transaction generators (paper datasets, micro-batch streams)
++ LM token pipeline."""
 from .lm_pipeline import TokenPipeline
+from .stream import stream_spec, transaction_stream
 from .synthetic import (DatasetSpec, PAPER_DATASETS, attribute_table,
-                        clickstream, generate, quest)
+                        clickstream, generate, materialize, quest)
 
 __all__ = ["TokenPipeline", "DatasetSpec", "PAPER_DATASETS", "attribute_table",
-           "clickstream", "generate", "quest"]
+           "clickstream", "generate", "materialize", "quest",
+           "transaction_stream", "stream_spec"]

@@ -22,7 +22,8 @@ from typing import List, Sequence
 
 import numpy as np
 
-__all__ = ["quest", "attribute_table", "clickstream", "DatasetSpec", "PAPER_DATASETS", "generate"]
+__all__ = ["quest", "attribute_table", "clickstream", "DatasetSpec",
+           "PAPER_DATASETS", "generate", "materialize"]
 
 
 def quest(
@@ -160,11 +161,10 @@ PAPER_DATASETS = {
 }
 
 
-def generate(name: str, scale: float = 1.0, seed: int = 0) -> tuple[List[List[int]], DatasetSpec]:
-    """Materialize a paper dataset (``scale`` shrinks n_txn for CPU budgets;
-    the Fig-16 scalability benchmark uses scale > 1)."""
-    spec = PAPER_DATASETS[name]
-    n_txn = max(16, int(round(spec.n_txn * scale)))
+def materialize(spec: DatasetSpec, n_txn: int, seed: int = 0) -> List[List[int]]:
+    """Draw exactly ``n_txn`` transactions from a spec's generator family
+    (shared by :func:`generate` and the streaming micro-batch source,
+    ``repro.data.stream``)."""
     if spec.kind == "quest":
         txns = quest(n_txn, spec.n_items, spec.avg_width,
                      spec.params["avg_pattern_len"],
@@ -177,4 +177,12 @@ def generate(name: str, scale: float = 1.0, seed: int = 0) -> tuple[List[List[in
                            zipf_a=spec.params.get("zipf_a", 1.6), seed=seed)
     else:
         raise ValueError(spec.kind)
-    return txns, spec
+    return txns
+
+
+def generate(name: str, scale: float = 1.0, seed: int = 0) -> tuple[List[List[int]], DatasetSpec]:
+    """Materialize a paper dataset (``scale`` shrinks n_txn for CPU budgets;
+    the Fig-16 scalability benchmark uses scale > 1)."""
+    spec = PAPER_DATASETS[name]
+    n_txn = max(16, int(round(spec.n_txn * scale)))
+    return materialize(spec, n_txn, seed=seed), spec

@@ -1,4 +1,4 @@
-"""repro.launch — mesh construction, dry-run, train/serve/mine drivers.
+"""repro.launch — mesh construction, dry-run, train/serve/mine/stream drivers.
 
 NOTE: dryrun must be executed as a module entry point
 (``python -m repro.launch.dryrun``) so its XLA_FLAGS lines run before any

@@ -1,4 +1,7 @@
-"""repro.serving — KV-cached batched inference engine."""
+"""repro.serving — KV-cached batched inference engine + live-window FIM
+query service (top-k itemsets / rules over the streaming miner)."""
 from .engine import Request, ServingEngine, pack_requests
+from .stream_query import ItemsetQuery, StreamQueryService, pack_queries
 
-__all__ = ["Request", "ServingEngine", "pack_requests"]
+__all__ = ["Request", "ServingEngine", "pack_requests",
+           "ItemsetQuery", "StreamQueryService", "pack_queries"]

@@ -1,0 +1,116 @@
+"""Live-window FIM query service: top-k itemsets and rules over the stream.
+
+``StreamQueryService`` sits on a :class:`repro.streaming.StreamingMiner` the
+way :class:`ServingEngine` sits on a model: ``ingest`` advances the window
+and refreshes the query snapshot; readers then query the *current window*
+without touching mining state.  Heterogeneous query batches are packed onto
+answer slots with the same greedy-LPT partitioner that packs equivalence
+classes onto executors and prompts onto decode batches (DESIGN.md §4/§5 —
+the paper's balance objective reused at the product surface).
+
+Rule generation is cached per (window snapshot, min_conf): repeated rule
+queries between slides pay the ``generate_rules`` scan once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.itemsets import generate_rules
+from ..core.partitioners import greedy_partitioner, partition_stats
+from ..streaming import StreamingMiner, WindowResult
+
+__all__ = ["ItemsetQuery", "StreamQueryService", "pack_queries"]
+
+
+@dataclasses.dataclass
+class ItemsetQuery:
+    """One reader request against the current window.
+
+    kind:     "topk" (k most supported itemsets of length >= min_len) or
+              "rules" (k most confident rules at min_conf).
+    """
+
+    qid: int
+    kind: str = "topk"
+    k: int = 10
+    min_len: int = 1
+    min_conf: float = 0.8
+
+
+def pack_queries(queries: Sequence[ItemsetQuery], n_batches: int,
+                 n_itemsets: int):
+    """Greedy-LPT pack queries into ``n_batches`` answer slots.
+
+    The work estimate is the number of store entries each query scans:
+    ``n_itemsets`` for a top-k pass, a rule-expansion multiple of it for
+    rule queries (antecedent enumeration dominates).
+    """
+    work = np.array(
+        [n_itemsets * (4.0 if q.kind == "rules" else 1.0) for q in queries],
+        np.float64)
+    assign = greedy_partitioner(np.arange(len(queries)), n_batches, work=work)
+    stats = partition_stats(assign, work, n_batches)
+    return assign, stats
+
+
+class StreamQueryService:
+    def __init__(self, miner: StreamingMiner):
+        self.miner = miner
+        self.result: Optional[WindowResult] = None
+        self._itemsets: List[Tuple[Tuple[int, ...], int]] = []
+        self._support_map: Dict[Tuple[int, ...], int] = {}
+        self._rules_cache: Dict[float, list] = {}
+        self.n_slides = 0
+
+    # -- writer side ---------------------------------------------------------
+
+    def ingest(self, batch: Sequence[Sequence[int]]) -> WindowResult:
+        """Advance the window one micro-batch and refresh the snapshot."""
+        result = self.miner.advance(batch)
+        self.result = result
+        self._itemsets = result.itemsets()
+        self._support_map = dict(self._itemsets)
+        self._rules_cache = {}
+        self.n_slides += 1
+        return result
+
+    # -- reader side ---------------------------------------------------------
+
+    def top_k_itemsets(self, k: int = 10, min_len: int = 1):
+        """k most supported frequent itemsets (ties: longer, then lex)."""
+        cand = [(s, it) for it, s in self._itemsets if len(it) >= min_len]
+        cand.sort(key=lambda e: (-e[0], -len(e[1]), e[1]))
+        return [(it, s) for s, it in cand[:k]]
+
+    def support(self, itemset: Sequence[int]) -> int:
+        """Support of one itemset over the live window (0 if infrequent)."""
+        return self._support_map.get(tuple(sorted(itemset)), 0)
+
+    def rules(self, min_conf: float = 0.8, k: Optional[int] = None):
+        """Most confident association rules over the live window."""
+        cached = self._rules_cache.get(min_conf)
+        if cached is None:
+            cached = sorted(generate_rules(self._support_map, min_conf),
+                            key=lambda r: (-r[2], -r[3], r[0], r[1]))
+            self._rules_cache[min_conf] = cached
+        return cached if k is None else cached[:k]
+
+    def answer_batch(self, queries: Sequence[ItemsetQuery], n_batches: int = 4):
+        """Answer a heterogeneous query batch, greedy-LPT packed.
+
+        Returns ``(answers by qid, packing stats)`` — the stats carry the
+        same ``padding_efficiency`` balance metric as the mining partitioner.
+        """
+        assign, stats = pack_queries(queries, n_batches, max(len(self._itemsets), 1))
+        answers: Dict[int, list] = {}
+        for q in queries:               # assignment is consumed by the stats
+            if q.kind == "topk":
+                answers[q.qid] = self.top_k_itemsets(q.k, q.min_len)
+            elif q.kind == "rules":
+                answers[q.qid] = self.rules(q.min_conf, q.k)
+            else:
+                raise ValueError(f"unknown query kind {q.kind!r}")
+        return answers, stats

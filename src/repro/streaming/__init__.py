@@ -1,0 +1,13 @@
+"""repro.streaming — sliding-window incremental Eclat over micro-batches.
+
+The window is a device-resident ring of packed word-blocks (``WindowRing``);
+``StreamingMiner`` maintains per-item supports and the co-occurrence count
+matrix incrementally (block deltas) and re-expands only the active
+equivalence classes through the ``core.engine`` backend interface.  Windowed
+results are bit-exact with batch ``core.eclat.mine`` over the same window
+contents (DESIGN.md §5).
+"""
+from .miner import StreamConfig, StreamingMiner, WindowResult
+from .window import WindowRing
+
+__all__ = ["StreamConfig", "StreamingMiner", "WindowResult", "WindowRing"]

@@ -1,0 +1,144 @@
+"""Sliding window of transactions as a device-resident ring of word-blocks.
+
+The batch miner packs the whole database once (``bitmap.pack_transactions``)
+and repacks from scratch on every change.  A sliding window makes that repack
+the dominant cost, so the window is kept as a *ring of word-blocks* instead:
+
+    ring[i, b*wpb : (b+1)*wpb]   words of block b for item i
+
+Each micro-batch of transactions is packed into one block (``wpb`` uint32
+words = ``block_txns`` transaction columns) and written over the expired
+block *in place* with one ``dynamic_update_slice`` — the rest of the window
+bitmap never moves, on host or device.  Support counting and intersection are
+per-word elementwise, so the physical word order of the ring (which wraps)
+never matters: any column permutation and any all-zero pad column leaves
+every support unchanged.  That invariance is what makes the ring bit-exact
+with a batch ``mine()`` over the same window contents (DESIGN.md §5).
+
+The ring keeps a host mirror of the packed words so per-item support deltas
+and the evicted block's co-occurrence delta can be formed without reading the
+device array back.
+"""
+from __future__ import annotations
+
+import warnings
+from functools import partial
+from typing import List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import bitmap as bm
+
+__all__ = ["WindowRing"]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _write_block_jit(ring: jax.Array, block: jax.Array, start: jax.Array) -> jax.Array:
+    return jax.lax.dynamic_update_slice_in_dim(ring, block, start, axis=1)
+
+
+def _write_block(ring: jax.Array, block: jax.Array, start: jax.Array) -> jax.Array:
+    """Overwrite one block's word span in place (``ring`` is donated so the
+    slide is a true in-place update on TPU/GPU; CPU has no donation and
+    would warn once per compile — suppressed here, for this call only)."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _write_block_jit(ring, block, start)
+
+
+class WindowRing:
+    """Fixed-capacity sliding window: ``n_blocks`` blocks of ``block_txns``
+    transaction columns each (``block_txns`` must be a multiple of 32 so block
+    boundaries are word boundaries).
+
+    ``push(batch)`` packs the micro-batch into the next ring slot, evicting
+    whatever block occupied it, and returns the (new, old) packed blocks so
+    the caller can form incremental support/co-occurrence deltas.
+    """
+
+    def __init__(self, n_items: int, n_blocks: int, block_txns: int,
+                 keep_transactions: bool = True):
+        if n_blocks < 1:
+            raise ValueError("need at least one block")
+        if block_txns < bm.WORD_BITS or block_txns % bm.WORD_BITS:
+            raise ValueError(f"block_txns must be a positive multiple of "
+                             f"{bm.WORD_BITS}, got {block_txns}")
+        self.n_items = int(n_items)
+        self.n_blocks = int(n_blocks)
+        self.block_txns = int(block_txns)
+        self.wpb = block_txns // bm.WORD_BITS          # words per block
+        self.n_words = self.n_blocks * self.wpb
+        self.words = np.zeros((self.n_items, self.n_words), np.uint32)
+        self.device = jnp.zeros((self.n_items, self.n_words), jnp.uint32)
+        self.block_counts = np.zeros(self.n_blocks, np.int64)  # txns per slot
+        self.head = 0            # next slot to (over)write
+        self.filled = 0          # slots holding live data
+        self.n_advances = 0
+        self._txns: Optional[List[List[Sequence[int]]]] = (
+            [[] for _ in range(self.n_blocks)] if keep_transactions else None)
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def n_txn(self) -> int:
+        """Live transactions in the window (pad columns excluded)."""
+        return int(self.block_counts.sum())
+
+    @property
+    def full(self) -> bool:
+        return self.filled == self.n_blocks
+
+    def _slot_span(self, slot: int) -> slice:
+        return slice(slot * self.wpb, (slot + 1) * self.wpb)
+
+    # -- the one mutating operation -----------------------------------------
+
+    def push(self, batch: Sequence[Sequence[int]]):
+        """Admit one micro-batch, evicting the expired block in place.
+
+        Returns ``(new_block, old_block, n_evicted)`` — both ``(n_items, wpb)``
+        uint32 host arrays (``old_block`` is all-zero while the window is
+        still warming up).
+        """
+        if len(batch) > self.block_txns:
+            raise ValueError(f"micro-batch of {len(batch)} txns exceeds "
+                             f"block capacity {self.block_txns}")
+        new_block = bm.pack_transactions(batch, self.n_items)
+        if new_block.shape[1] < self.wpb:   # partial batch: zero-pad columns
+            new_block = np.pad(
+                new_block, ((0, 0), (0, self.wpb - new_block.shape[1])))
+        slot = self.head
+        span = self._slot_span(slot)
+        old_block = self.words[:, span].copy()
+        n_evicted = int(self.block_counts[slot])
+        self.words[:, span] = new_block
+        self.device = _write_block(self.device, jnp.asarray(new_block),
+                                   jnp.int32(slot * self.wpb))
+        self.block_counts[slot] = len(batch)
+        if self._txns is not None:
+            self._txns[slot] = [list(t) for t in batch]
+        self.head = (self.head + 1) % self.n_blocks
+        self.filled = min(self.filled + 1, self.n_blocks)
+        self.n_advances += 1
+        return new_block, old_block, n_evicted
+
+    # -- introspection (tests / bench comparators) --------------------------
+
+    def window_transactions(self) -> List[List[int]]:
+        """The window's live transactions, oldest block first (requires
+        ``keep_transactions=True``)."""
+        if self._txns is None:
+            raise RuntimeError("ring was built with keep_transactions=False")
+        out: List[List[int]] = []
+        oldest = self.head if self.full else 0
+        for i in range(self.filled):
+            slot = (oldest + i) % self.n_blocks
+            out.extend(list(t) for t in self._txns[slot])
+        return out
+
+    def validate(self) -> None:
+        """Host mirror == device ring, supports consistent (test hook)."""
+        np.testing.assert_array_equal(np.asarray(self.device), self.words)

@@ -83,7 +83,10 @@ def test_backend_parity(backend, mode, p, w, q):
                    mode=mode, min_sup=min_sup, device_of_pair=dev)
     np.testing.assert_array_equal(res.mask, ref_mask)
     np.testing.assert_array_equal(res.supports, ref_sup)
-    np.testing.assert_array_equal(np.asarray(res.bitmaps), ref_bm)
+    # survivors live in rows [:S]; rows beyond are rung padding
+    assert res.bitmaps.shape[0] >= ref_bm.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(res.bitmaps)[: ref_bm.shape[0]], ref_bm)
 
 
 @pytest.mark.parametrize("backend", ["pallas-kernel", "sharded-pallas-kernel"])
@@ -99,7 +102,9 @@ def test_pallas_kernel_parity(backend, mode, p, w, q):
                    mode=mode, min_sup=min_sup, device_of_pair=dev)
     np.testing.assert_array_equal(res.mask, ref_mask)
     np.testing.assert_array_equal(res.supports, ref_sup)
-    np.testing.assert_array_equal(np.asarray(res.bitmaps), ref_bm)
+    assert res.bitmaps.shape[0] >= ref_bm.shape[0]
+    np.testing.assert_array_equal(
+        np.asarray(res.bitmaps)[: ref_bm.shape[0]], ref_bm)
 
 
 def test_kernel_multi_word_blocks():
