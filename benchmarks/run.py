@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   kernel_microbench    kernels: popcount-support / trimatrix / containment
   engine               core.engine backend trajectory -> BENCH_engine.json
   streaming            incremental vs full window re-mine -> BENCH_streaming.json
+  shardscale           word-sharded frontier parity + per-device memory
+                       vs mesh size -> BENCH_shardscale.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
@@ -29,6 +31,7 @@ from benchmarks.engine_bench import engine_bench
 from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
 from benchmarks.micro import kernel_microbench, moe_balance
+from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
 
 TABLES = {
@@ -39,6 +42,7 @@ TABLES = {
     "kernel_microbench": kernel_microbench,
     "engine": engine_bench,
     "streaming": streaming_bench,
+    "shardscale": shardscale_bench,
     "moe_balance": moe_balance,
 }
 
@@ -54,6 +58,7 @@ def main() -> None:
     tables = {
         "engine": functools.partial(engine_bench, smoke=True),
         "streaming": functools.partial(streaming_bench, smoke=True),
+        "shardscale": functools.partial(shardscale_bench, smoke=True),
     } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
     for name, fn in tables.items():

@@ -10,7 +10,8 @@ sys.path.insert(0, "src")
 
 from repro.analysis.report import (dryrun_table, fim_table, load_bench,
                                    load_reports, perf_log_table,
-                                   roofline_table, streaming_table)
+                                   roofline_table, shardscale_table,
+                                   streaming_table)
 
 HEADER = """# EXPERIMENTS
 
@@ -62,6 +63,12 @@ def main():
     if streaming:
         parts.append("\n\n## §Streaming (sliding-window incremental vs full re-mine)\n")
         parts.append(streaming_table(streaming))
+
+    shardscale = load_bench("BENCH_shardscale.json")
+    if shardscale:
+        parts.append("\n\n## §Shard-scale (word-sharded frontier: parity + "
+                     "per-device memory)\n")
+        parts.append(shardscale_table(shardscale))
 
     if reports:
         parts.append("\n\n## §Dry-run (compile proof, memory, collective schedule)\n")

@@ -1,5 +1,6 @@
 """EXPERIMENTS.md table generation: §Dry-run / §Roofline from reports/,
-§FIM engine from BENCH_engine.json, §Streaming from BENCH_streaming.json."""
+§FIM engine from BENCH_engine.json, §Streaming from BENCH_streaming.json,
+§Shard-scale from BENCH_shardscale.json."""
 from __future__ import annotations
 
 import glob
@@ -8,7 +9,8 @@ import os
 from typing import Dict, List, Optional
 
 __all__ = ["load_reports", "load_bench", "roofline_table", "dryrun_table",
-           "perf_log_table", "fim_table", "streaming_table"]
+           "perf_log_table", "fim_table", "streaming_table",
+           "shardscale_table"]
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -181,6 +183,47 @@ def streaming_table(bench: dict) -> str:
             " (**regression: incremental loses at some window size**)")
     rows.append(f"\nMinimum speedup across window sizes: "
                 f"**x{bench['min_speedup']:.2f}**{note}.")
+    return "\n".join(rows)
+
+
+def shardscale_table(bench: dict) -> str:
+    """Markdown: word-sharded parity + per-device memory vs mesh size
+    (BENCH_shardscale.json, DESIGN.md §7)."""
+    rows = [
+        f"Dataset {bench['dataset']} x{bench['scale']} ({bench['n_txn']} "
+        f"txns), min_sup={bench['min_sup']}, jax backend "
+        f"`{bench['jax_backend']}`"
+        + (", smoke scale.\n" if bench.get("smoke") else ".\n"),
+        "Batch parity — tidsharded (4-device mesh, `P(None, \"data\")` "
+        "frontier) vs jnp vs pallas:\n",
+        "| variant | itemsets | bit-identical | tidsharded wall | jnp wall |",
+        "|---|---|---|---|---|",
+    ]
+    for v in ("v1", "v2", "v3", "v4", "v5", "v6"):
+        p = bench["parity"][v]
+        rows.append(f"| {v} | {p['itemsets']} | {p['identical']} | "
+                    f"{p['wall_s']['tidsharded']*1e3:.0f}ms | "
+                    f"{p['wall_s']['jnp']*1e3:.0f}ms |")
+    s = bench["parity"]["streaming"]
+    rows.append(
+        f"\nStreaming: {s['slides']} slides on a word-sharded ring "
+        f"(`{s['ring_spec']}`, {s['ring_bytes_per_device']} bytes/device of "
+        f"{s['ring_bytes_total']} total), engine `{s['engine']}`, "
+        f"bit-identical with batch re-mine: **{s['identical']}**.\n")
+    rows += [
+        "Per-device frontier bytes vs mesh size (same expansion, identical "
+        "support checksums):\n",
+        "| devices | level bitmap/device | level bitmap total | DB bitmap/device | survivors |",
+        "|---|---|---|---|---|",
+    ]
+    for m in bench["memory"]:
+        rows.append(
+            f"| {m['n_devices']} | {m['level_bitmap_bytes_per_device']} | "
+            f"{m['level_bitmap_bytes_total']} | "
+            f"{m['db_bitmap_bytes_per_device']} | {m['survivors']} |")
+    rows.append(f"\nPer-device reduction at 4 devices: "
+                f"**x{bench['per_device_reduction_4dev']:.2f}** "
+                f"(supports identical: {bench['memory_supports_identical']}).")
     return "\n".join(rows)
 
 

@@ -15,7 +15,6 @@ keeps for itself.
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from functools import partial
 from typing import Dict, List, Sequence, Tuple
@@ -80,7 +79,10 @@ def apriori_mine(
 ) -> AprioriResult:
     t_start = time.perf_counter()
     n_txn = len(transactions)
-    abs_min_sup = int(min_sup) if min_sup >= 1 else max(1, int(math.ceil(min_sup * n_txn)))
+    # same type-based fraction/count disambiguation as Eclat, so the
+    # baseline and the paper variants stay comparable at any threshold
+    from .eclat import resolve_min_sup
+    abs_min_sup = resolve_min_sup(min_sup, n_txn)
 
     # Phase 1 (YAFIM): frequent items — single pass
     packed = bm.pack_transactions(transactions, n_items)

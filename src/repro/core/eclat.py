@@ -52,27 +52,49 @@ VARIANTS: Dict[str, dict] = {
 }
 
 
-def resolve_min_sup(min_sup: float, n_txn: int) -> int:
-    """Fraction (<1, of ``n_txn``) or absolute count (>=1) -> absolute count.
+def resolve_min_sup(min_sup, n_txn: int) -> int:
+    """Support threshold -> absolute count, disambiguated by *type*:
 
-    Shared by the batch and streaming configs: the streaming/batch
-    bit-exactness contract (DESIGN.md §5) requires both to resolve a
-    fractional threshold identically.
+    - a float in (0, 1] is a support **fraction** of ``n_txn`` (so
+      ``min_sup=1.0`` means "appears in every transaction", resolving to
+      ``n_txn`` — not the absolute count 1 a value-based cutoff would read);
+    - an int >= 1 (or a float > 1) is an absolute **count**.
+
+    Anything else (zero, negatives, bools) is rejected.  Shared by the batch
+    and streaming configs: the streaming/batch bit-exactness contract
+    (DESIGN.md §5) requires both to resolve a threshold identically.
     """
-    if min_sup >= 1:
+    if isinstance(min_sup, (bool, np.bool_)):
+        raise TypeError(f"min_sup must be a number, got bool {min_sup!r}")
+    if isinstance(min_sup, (int, np.integer)):
+        if min_sup < 1:
+            raise ValueError(f"integer min_sup is an absolute count and must "
+                             f"be >= 1, got {int(min_sup)}")
         return int(min_sup)
-    return max(1, int(math.ceil(min_sup * n_txn)))
+    f = float(min_sup)
+    if 0.0 < f <= 1.0:
+        return max(1, int(math.ceil(f * n_txn)))
+    if f > 1.0:
+        if not f.is_integer():
+            raise ValueError(
+                f"float min_sup > 1 is an absolute count and must be "
+                f"integral (truncating {min_sup!r} would lower the "
+                f"threshold); pass an int or a fraction in (0, 1]")
+        return int(f)
+    raise ValueError(f"min_sup must be a fraction in (0, 1] or an absolute "
+                     f"count >= 1, got {min_sup!r}")
 
 
 @dataclasses.dataclass
 class EclatConfig:
-    min_sup: float                      # fraction (<1) or absolute count (>=1)
+    min_sup: float                      # float in (0,1] = fraction; int >= 1 = count
     variant: str = "v4"
     p: int = 10                         # partitions for v4/v5/v6 (paper: p=10)
     tri_matrix: Optional[bool] = None   # None = auto (paper's triMatrixMode)
     tri_matrix_max_items: int = 4096    # auto threshold (paper: item-id range)
-    use_diffsets: bool = False          # v6 only (dEclat)
-    backend: str = "pallas"             # jnp | pallas | sharded ("batched" = legacy alias)
+    use_diffsets: bool = False          # v6 only (dEclat); other variants reject it
+    backend: str = "pallas"             # jnp | pallas | sharded | tidsharded ("batched" = legacy alias)
+    shard: str = "pairs"                # mesh split: "pairs" (frontier replicated) | "words" (tid axis, DESIGN.md §7)
     max_k: Optional[int] = None
     bucket_min: int = 1024              # pair-buffer bucket-ladder floor
     chunk_pairs: int = 1 << 18          # level-2 chunking when tri-matrix off
@@ -183,8 +205,15 @@ def mine(
     config: EclatConfig,
     mesh: Optional[jax.sharding.Mesh] = None,
 ) -> EclatResult:
-    """Mine all frequent itemsets.  ``mesh`` enables the sharded backend."""
+    """Mine all frequent itemsets.  ``mesh`` enables the mesh-mapped
+    backends (``config.shard`` picks pair- vs word-sharding)."""
     spec = VARIANTS[config.variant]
+    if config.use_diffsets and config.variant != "v6":
+        # every variant but v6 mines tidsets; silently dropping the flag
+        # would hand back correct-looking results from a different algorithm
+        raise ValueError(
+            f"use_diffsets is only supported by variant 'v6' (dEclat); "
+            f"variant {config.variant!r} would silently ignore it")
     t_start = time.perf_counter()
     stats: dict = {"variant": config.variant, "phase_s": {}}
 
@@ -208,7 +237,9 @@ def mine(
     est = pair_work(sizes1 + 1, w)  # +1: member count of class r is n1-1-r
     eff_p = config.p if spec["partitioner"] in ("hash", "reverse_hash", "greedy") else max(n_classes, 1)
     table = assign_partitions(n_classes, spec["partitioner"], eff_p, work=est)
-    execu = eng.resolve_engine(config.backend, mesh, bucket_min=config.bucket_min)
+    execu = eng.resolve_engine(config.backend, mesh,
+                               bucket_min=config.bucket_min,
+                               shard=config.shard)
     stats["backend"] = execu.name
     # partition -> device round robin (sharded backend only)
     part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
@@ -227,8 +258,12 @@ def mine(
         stats["total_s"] = time.perf_counter() - t_start
         return EclatResult(store=store, db=db, stats=stats)
 
-    bitmaps = jnp.asarray(db.bitmaps)
-    diffsets = config.use_diffsets and config.variant == "v6"
+    # place the level-1 frontier the way the backend carries it, once —
+    # the chunked no-tri-matrix path below expands the same frontier many
+    # times, and per-call placement (a word-axis reshard for tidsharded)
+    # would repeat for every chunk
+    bitmaps = execu.prepare_frontier(jnp.asarray(db.bitmaps))
+    diffsets = config.use_diffsets
 
     # ---- Phase 2: triangular matrix (2-itemset counts) --------------------
     t0 = time.perf_counter()
@@ -308,11 +343,14 @@ def mine(
     stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
 
     # ---- balance bookkeeping ----------------------------------------------
-    lvl2 = store.levels[1] if len(store.levels) > 1 else None
-    if lvl2 is not None and lvl2.partition.size:
-        work = np.ones_like(lvl2.partition, dtype=np.float64) * w
+    # balance of the *estimated* class work that drove partitioning (the
+    # pair_work model the partitioners optimized), not a uniform per-pair
+    # weight — so the reported efficiency reflects the actual assignment
+    if n_classes > 0:
+        pstats = partition_stats(table, est, eff_p)
         stats["partition_balance"] = {
-            k_: v for k_, v in partition_stats(lvl2.partition, work, eff_p).items() if k_ != "loads"
+            **{k_: v for k_, v in pstats.items() if k_ != "loads"},
+            "estimated_loads": pstats["loads"].tolist(),
         }
     stats.update(execu.stats())
     stats["total_s"] = time.perf_counter() - t_start

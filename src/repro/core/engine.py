@@ -23,6 +23,13 @@ Backends (``register_backend`` registry, selected by ``EclatConfig.backend``):
            common bucket, and executed under ``shard_map`` — the paper's
            executor-task mapping.  Constructed automatically when ``mine``
            receives a mesh.
+  tidsharded  word-sharded (tid-axis) execution: the frontier bitmap is
+           carried as ``P(None, "data")`` — every device holds all rows but
+           only a word slice — each shard intersects and popcounts its
+           slice, supports are recovered with one psum, and survivor
+           compaction stays shard-local.  Per-device frontier memory is
+           total/n_shards, so windows larger than one device's memory stay
+           minable (DESIGN.md §7).  Selected by ``shard="words"``.
 
 Bucket ladder: pair batches are padded up to a power-of-two ladder
 (``bucket_min * 2**k``), so every XLA/Mosaic executable is compiled once per
@@ -38,16 +45,20 @@ from typing import Callable, Dict, List, Optional, Tuple, Type
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..dist.compat import shard_map, shard_map_unchecked
+from ..dist.sharding import shard_words, word_shard_spec
 from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
                                        MODE_TIDSET, fused_intersect,
+                                       fused_intersect_partial,
+                                       fused_intersect_partial_ref,
                                        fused_intersect_ref)
 
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
     "LevelResult", "Engine", "JnpEngine", "PallasEngine", "ShardedEngine",
+    "TidShardedEngine",
     "register_backend", "available_backends", "make_engine", "resolve_engine",
 ]
 
@@ -141,18 +152,18 @@ def make_engine(
 ) -> "Engine":
     """Construct a backend by registry name.
 
-    ``sharded`` requires a mesh; ``interpret`` forces the Pallas kernel's
-    interpreter (tests) instead of the TPU/ref dispatch.
+    ``sharded`` / ``tidsharded`` require a mesh; ``interpret`` forces the
+    Pallas kernel's interpreter (tests) instead of the TPU/ref dispatch.
     """
     cls = BACKENDS.get(backend)
     if cls is None:
         raise ValueError(f"unknown engine backend {backend!r}; "
                          f"available: {available_backends()}")
-    if backend == "sharded":
+    if backend in ("sharded", "tidsharded"):
         if mesh is None:
-            raise ValueError("sharded backend requires a mesh")
-        return ShardedEngine(mesh, bucket_min=bucket_min, inner=inner,
-                             interpret=interpret)
+            raise ValueError(f"{backend} backend requires a mesh")
+        return cls(mesh, bucket_min=bucket_min, inner=inner,
+                   interpret=interpret)
     if backend == "pallas":
         return PallasEngine(bucket_min=bucket_min, interpret=interpret)
     return cls(bucket_min=bucket_min)
@@ -163,24 +174,35 @@ def resolve_engine(
     mesh: Optional[jax.sharding.Mesh] = None,
     *,
     bucket_min: int = 1024,
+    shard: str = "pairs",
 ) -> "Engine":
-    """Map a (backend name, mesh) request onto an engine instance.
+    """Map a (backend name, mesh, shard mode) request onto an engine.
 
-    A mesh always means the sharded backend (the paper's executor mapping),
-    with the named single-device backend as its inner executor; ``"batched"``
-    and ``"auto"`` are legacy aliases for the single-device default (pallas).
-    ``"sharded"`` without a mesh degrades gracefully to that default.  Both
-    the batch driver (``core.eclat.mine``) and the streaming miner
+    A mesh always means a mesh-mapped backend, with the named single-device
+    backend as its inner executor; ``shard`` picks which axis the mesh
+    splits: ``"pairs"`` (ShardedEngine — candidate pairs distributed, the
+    frontier replicated; the paper's executor mapping) or ``"words"``
+    (TidShardedEngine — the frontier's word axis distributed, pairs
+    replicated; DESIGN.md §7).  ``"batched"`` and ``"auto"`` are legacy
+    aliases for the single-device default (pallas); ``"sharded"`` /
+    ``"tidsharded"`` without a mesh degrade gracefully to that default.
+    Both the batch driver (``core.eclat.mine``) and the streaming miner
     (``repro.streaming``) resolve their executors here.
     """
+    if shard not in ("pairs", "words"):
+        raise ValueError(f"unknown shard mode {shard!r}; "
+                         "expected 'pairs' or 'words'")
     if backend in ("batched", "auto"):
         backend = "pallas"
-    if mesh is not None or backend == "sharded":
+    if backend == "tidsharded":
+        shard = "words"
+    if mesh is not None or backend in ("sharded", "tidsharded"):
         if mesh is None:
             backend = "pallas"
         else:
             inner = backend if backend in ("jnp", "pallas") else "pallas"
-            return make_engine("sharded", mesh=mesh, bucket_min=bucket_min,
+            name = "tidsharded" if shard == "words" else "sharded"
+            return make_engine(name, mesh=mesh, bucket_min=bucket_min,
                                inner=inner)
     return make_engine(backend, bucket_min=bucket_min)
 
@@ -218,6 +240,11 @@ class Engine:
                            supports=np.zeros(0, np.int64),
                            bitmaps=jnp.zeros((0, w), jnp.uint32))
 
+    def _take(self, block: jax.Array, idx: jax.Array) -> jax.Array:
+        """Device row gather behind compaction; backends that must preserve
+        a placement (tid-sharding) override only this."""
+        return _take_rows(block, idx)
+
     def _compact(self, block: jax.Array, sel: np.ndarray) -> jax.Array:
         """Gather survivor rows ``sel`` out of ``block``, padded to a
         power-of-two rung (pad slots gather row 0) so the device gather and
@@ -225,7 +252,14 @@ class Engine:
         sb = bucket_size(max(int(sel.shape[0]), 1), self.buffers.floor)
         idx = np.zeros(sb, np.int32)
         idx[:sel.shape[0]] = sel
-        return _take_rows(block, jnp.asarray(idx))
+        return self._take(block, jnp.asarray(idx))
+
+    def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
+        """Place a frontier the way this backend will carry it (identity for
+        single-device backends).  Drivers that expand the same frontier many
+        times (chunked level 2) call this once instead of paying per-call
+        placement."""
+        return bitmaps
 
     def snapshot(self) -> Tuple[int, int, int]:
         """Counter snapshot, for per-call deltas on a long-lived engine
@@ -372,6 +406,18 @@ class ShardedEngine(Engine):
         d = self.n_devices
         if device_of_pair is None:
             device_of_pair = np.zeros(q, np.int64)
+        device_of_pair = np.asarray(device_of_pair, np.int64)
+        if device_of_pair.shape != (q,):
+            raise ValueError(f"device_of_pair must be shape ({q},), got "
+                             f"{device_of_pair.shape}")
+        # an out-of-range device id would fall outside the per-device
+        # grouping loop below and leave its slot_of_pair entry uninitialized
+        # — garbage slots, silently wrong supports — so refuse it up front
+        if (device_of_pair < 0).any() or (device_of_pair >= d).any():
+            bad = device_of_pair[(device_of_pair < 0) | (device_of_pair >= d)]
+            raise ValueError(
+                f"device_of_pair contains ids outside [0, {d}) for this "
+                f"{d}-device mesh: {np.unique(bad).tolist()[:8]}")
         # group pairs by the device their equivalence class lives on and pad
         # every device block to a shared ladder rung
         order = np.argsort(device_of_pair, kind="stable")
@@ -407,3 +453,115 @@ class ShardedEngine(Engine):
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
                            bitmaps=surv)
+
+
+# ---------------------------------------------------------------------------
+# tid-sharded backend (frontier word axis split across the mesh)
+# ---------------------------------------------------------------------------
+
+@register_backend("tidsharded")
+class TidShardedEngine(Engine):
+    """Word-sharded executor: the frontier bitmap is carried as
+    ``P(None, axis)`` — rows replicated, the packed word (tid) axis split
+    across the mesh — so each device stores 1/n_shards of every tidset.
+
+    Per expansion, every shard intersects and popcounts its word slice for
+    *all* pairs (the partial kernel), one ``psum`` across shards turns the
+    partial counts into supports, and the min-support mask is applied to the
+    reduced value.  Survivor compaction is a shard-local row gather under a
+    ``P(None, axis)`` constraint, so the full (Q, W) intersection block never
+    materializes on any single device, the host, or the interconnect — only
+    the (Q,) count vector crosses shards.  This is the mode that lets a
+    window larger than one device's memory stay minable (DESIGN.md §7);
+    trade-off vs the pair-sharded engine: every device does every pair's
+    AND, but on 1/n of the words, so compute per device is unchanged while
+    memory drops ~1/n.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 1024,
+                 axis: str = "data", inner: str = "pallas",
+                 interpret: Optional[bool] = None):
+        super().__init__(bucket_min)
+        self.mesh = mesh
+        self.axis = axis
+        self.inner = inner
+        self.n_shards = int(mesh.shape[axis])
+        # pairs are never distributed in this mode: partition->device routing
+        # (device_of_pair) is meaningless and ignored, so advertise a single
+        # pair device to the drivers
+        self.n_devices = 1
+        if inner not in ("jnp", "pallas"):
+            raise ValueError(f"unknown inner executor {inner!r}")
+        self._spec = word_shard_spec(axis)
+        self._sharding = NamedSharding(mesh, self._spec)
+
+        def _local(bms, l, r, s, msup, _mode):
+            if inner == "pallas":
+                inter, pop = fused_intersect_partial(bms, l, r, mode=_mode,
+                                                     interpret=interpret)
+            else:
+                inter, pop = fused_intersect_partial_ref(bms, l, r, mode=_mode)
+            total = jax.lax.psum(pop, axis)
+            sup = total if _mode == MODE_TIDSET else s - total
+            mask = (sup >= msup).astype(jnp.int32)
+            return inter, sup, mask
+
+        # pallas_call has no shard_map replication rule -> unchecked variant
+        smap = shard_map_unchecked if inner == "pallas" else shard_map
+        self._sharded = {
+            mode: jax.jit(
+                smap(
+                    lambda bms, l, r, s, m, _mode=mode: _local(bms, l, r, s, m, _mode),
+                    mesh=mesh,
+                    in_specs=(self._spec, P(), P(), P(), P()),
+                    out_specs=(self._spec, P(), P()),
+                )
+            )
+            for mode in (MODE_TIDSET, MODE_TID_TO_DIFF, MODE_DIFFSET)
+        }
+        self._take_rows_sharded = jax.jit(
+            lambda arr, idx: jax.lax.with_sharding_constraint(
+                jnp.take(arr, idx, axis=0), self._sharding))
+
+    def _ensure_sharded(self, bitmaps: jax.Array) -> jax.Array:
+        """Commit the frontier to ``P(None, axis)``, zero-padding the word
+        axis to a shard multiple.  Frontiers this engine produced are already
+        placed (compaction keeps the constraint), so steady-state levels are
+        a no-op here."""
+        if bitmaps.shape[1] % self.n_shards == 0:
+            sh = getattr(bitmaps, "sharding", None)
+            if (isinstance(sh, NamedSharding) and sh.mesh == self.mesh
+                    and sh.spec == self._spec):
+                return bitmaps
+        return shard_words(bitmaps, self.mesh, self.axis)
+
+    def _take(self, block: jax.Array, idx: jax.Array) -> jax.Array:
+        # shard-local survivor gather: rows move, the word sharding stays
+        return self._take_rows_sharded(block, idx)
+
+    def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
+        return self._ensure_sharded(bitmaps)
+
+    def stats(self, since=None) -> dict:
+        out = super().stats(since=since)
+        out["n_word_shards"] = self.n_shards
+        return out
+
+    def expand(self, bitmaps, left, right, sup_left, *, mode, min_sup,
+               device_of_pair=None):
+        q = int(left.shape[0])
+        if q == 0:
+            return self._empty(bitmaps)
+        self.n_intersections += q
+        qb, l, r, s = self.buffers.fill(left, right, sup_left)
+        self.n_padded += qb - q
+        bitmaps = self._ensure_sharded(bitmaps)
+        inter, sup, mask_dev = self._sharded[mode](
+            bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
+            jnp.int32(min_sup))
+        mask = np.asarray(mask_dev)[:q].astype(bool)
+        sup_np = np.asarray(sup)[:q]
+        sel = np.nonzero(mask)[0]
+        return LevelResult(mask=mask,
+                           supports=sup_np[sel].astype(np.int64),
+                           bitmaps=self._compact(inter, sel))

@@ -13,11 +13,13 @@ everything that touches a drifting jax API goes through
 :mod:`repro.dist.compat`.
 """
 from .compat import AxisType, make_mesh, shard_map
-from .sharding import (batch_spec, constrain, dp_axes, get_mesh, param_spec,
-                       reset_mesh, set_mesh, sharding_tree, spec_tree)
+from .sharding import (batch_spec, constrain, dp_axes, get_mesh,
+                       padded_word_count, param_spec, reset_mesh, set_mesh,
+                       shard_words, sharding_tree, spec_tree, word_shard_spec)
 
 __all__ = [
     "AxisType", "make_mesh", "shard_map",
     "batch_spec", "constrain", "dp_axes", "get_mesh", "param_spec",
     "reset_mesh", "set_mesh", "sharding_tree", "spec_tree",
+    "word_shard_spec", "padded_word_count", "shard_words",
 ]

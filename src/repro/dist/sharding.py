@@ -28,7 +28,8 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["set_mesh", "get_mesh", "reset_mesh", "dp_axes", "constrain",
-           "param_spec", "batch_spec", "spec_tree", "sharding_tree"]
+           "param_spec", "batch_spec", "spec_tree", "sharding_tree",
+           "word_shard_spec", "padded_word_count", "shard_words"]
 
 # axis names that count as gradient-reduction ("data-parallel") axes
 DP_AXIS_NAMES = ("pod", "data")
@@ -118,6 +119,50 @@ def constrain(x, spec: P):
         return x
     spec = _sanitize(spec, x.shape, mesh)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# word-axis (tid) sharding for packed bitmaps
+# ---------------------------------------------------------------------------
+#
+# A packed vertical bitmap is (n_items, n_words) uint32 with transactions
+# along the *word* axis.  Tid-sharded mining (DESIGN.md §7) splits that axis
+# across the mesh: each device holds every item's row but only a word slice,
+# so per-device frontier memory is total/n_shards — the axis the paper
+# scales (database size) stops being bounded by one device.  Popcount is
+# additive across word slices, so supports are recovered with one psum.
+
+
+def word_shard_spec(axis: str = "data") -> P:
+    """PartitionSpec for a (rows, words) bitmap sharded on its word axis —
+    ``P(None, axis)``: rows replicated, transaction words split."""
+    return P(None, axis)
+
+
+def padded_word_count(n_words: int, n_shards: int) -> int:
+    """Smallest word count >= ``n_words`` divisible by ``n_shards`` (zero pad
+    words carry no set bits, so supports are unchanged)."""
+    n_shards = max(int(n_shards), 1)
+    return max(int(n_words), 0) + (-int(n_words)) % n_shards
+
+
+def shard_words(arr, mesh, axis: str = "data"):
+    """Place a (rows, n_words) bitmap on ``mesh`` with its word axis sharded.
+
+    Pads the word axis with zero words up to a multiple of the axis size
+    (popcount-neutral) and returns a committed ``NamedSharding(mesh,
+    P(None, axis))`` array.
+    """
+    import jax.numpy as jnp
+
+    arr = jnp.asarray(arr)
+    if arr.ndim != 2:
+        raise ValueError(f"expected a (rows, words) bitmap, got {arr.shape}")
+    n_shards = int(mesh.shape[axis])
+    wp = padded_word_count(arr.shape[1], n_shards)
+    if wp != arr.shape[1]:
+        arr = jnp.pad(arr, ((0, 0), (0, wp - arr.shape[1])))
+    return jax.device_put(arr, NamedSharding(mesh, word_shard_spec(axis)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,12 @@
 from .fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET,
-                              fused_intersect_pairs)
-from .ops import fused_intersect
-from .ref import fused_intersect_ref
+                              fused_intersect_pairs,
+                              fused_intersect_partial_pairs)
+from .ops import fused_intersect, fused_intersect_partial
+from .ref import fused_intersect_partial_ref, fused_intersect_ref
 
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
     "fused_intersect", "fused_intersect_pairs", "fused_intersect_ref",
+    "fused_intersect_partial", "fused_intersect_partial_pairs",
+    "fused_intersect_partial_ref",
 ]

@@ -69,6 +69,95 @@ def _kernel(idx_ref, supl_ref, msup_ref, a_ref, b_ref,
         mask_ref[0] = (sup >= msup_ref[0]).astype(jnp.int32)
 
 
+def _kernel_partial(idx_ref, a_ref, b_ref, inter_ref, pop_ref, *, mode):
+    """Shard-local half of the fused kernel: intersect + accumulate popcount.
+
+    No ``sup_left`` finishing and no min-support mask — on a word-sharded
+    frontier each device sees only its word slice, so the popcount here is a
+    *partial* count; the caller psums it across shards before thresholding
+    (``repro.core.engine.TidShardedEngine``, DESIGN.md §7).
+    """
+    wj = pl.program_id(1)
+    a = a_ref[...]
+    b = b_ref[...]
+    if mode == MODE_TIDSET:
+        inter = jnp.bitwise_and(a, b)
+    elif mode == MODE_TID_TO_DIFF:
+        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
+    else:
+        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    inter_ref[...] = inter
+    partial = jax.lax.population_count(inter).astype(jnp.int32).sum()
+
+    @pl.when(wj == 0)
+    def _init():
+        pop_ref[0] = partial
+
+    @pl.when(wj != 0)
+    def _acc():
+        pop_ref[0] = pop_ref[0] + partial
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_w", "interpret")
+)
+def fused_intersect_partial_pairs(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    *,
+    mode: int = MODE_TIDSET,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+):
+    """(P, W) uint32 frontier shard x (Q,) int32 pair indices ->
+    ((Q, W) uint32 intersections, (Q,) int32 partial popcounts).
+
+    The word-sharded counterpart of :func:`fused_intersect_pairs`: it stops
+    at the raw popcount (no support conversion, no threshold) because both
+    need the *total* count, which only exists after a cross-shard psum.
+    """
+    if bitmaps.ndim != 2:
+        raise ValueError(f"expected (P, W) frontier shard, got {bitmaps.shape}")
+    if left.shape != right.shape:
+        raise ValueError("left/right must share a (Q,) shape")
+    qn = left.shape[0]
+    w = bitmaps.shape[1]
+    bw = min(block_w, max(w, 1))
+    pad_w = (-w) % bw
+    if pad_w:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad_w)))
+    wp = bitmaps.shape[1]
+
+    idx = jnp.stack([left.astype(jnp.int32), right.astype(jnp.int32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(qn, wp // bw),
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref: (idx_ref[0, q], j)),
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref: (idx_ref[1, q], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, *_: (q, j)),
+            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
+        ],
+    )
+    inter, pop = pl.pallas_call(
+        functools.partial(_kernel_partial, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(idx, bitmaps, bitmaps)
+    return inter[:, :w], pop
+
+
 @functools.partial(
     jax.jit, static_argnames=("mode", "block_w", "interpret")
 )

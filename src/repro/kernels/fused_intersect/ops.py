@@ -8,12 +8,32 @@ from __future__ import annotations
 
 import jax
 
-from .fused_intersect import fused_intersect_pairs
-from .ref import fused_intersect_ref
+from .fused_intersect import (fused_intersect_pairs,
+                              fused_intersect_partial_pairs)
+from .ref import fused_intersect_partial_ref, fused_intersect_ref
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def fused_intersect_partial(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    *,
+    mode: int,
+    interpret: bool | None = None,
+):
+    """Shard-local fused gather+AND+popcount (no threshold); see the partial
+    kernel docstring.  Dispatch mirrors :func:`fused_intersect`."""
+    if interpret is None:
+        if _on_tpu():
+            return fused_intersect_partial_pairs(bitmaps, left, right,
+                                                 mode=mode)
+        return fused_intersect_partial_ref(bitmaps, left, right, mode=mode)
+    return fused_intersect_partial_pairs(bitmaps, left, right, mode=mode,
+                                         interpret=interpret)
 
 
 def fused_intersect(

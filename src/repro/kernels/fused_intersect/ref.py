@@ -16,6 +16,34 @@ from .fused_intersect import MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
+def fused_intersect_partial_ref(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    *,
+    mode: int = MODE_TIDSET,
+):
+    """(P, W) shard x (Q,) -> ((Q, W) uint32, (Q,) int32 partial popcount).
+
+    Oracle for the word-sharded partial kernel: intersect the shard, count
+    its bits, and stop — support conversion and thresholding happen after
+    the caller's cross-shard psum (DESIGN.md §7).
+    """
+    a = jnp.take(bitmaps, left.astype(jnp.int32), axis=0)
+    b = jnp.take(bitmaps, right.astype(jnp.int32), axis=0)
+    if mode == MODE_TIDSET:
+        inter = jnp.bitwise_and(a, b)
+    elif mode == MODE_TID_TO_DIFF:
+        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
+    elif mode == MODE_DIFFSET:
+        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    else:
+        raise ValueError(f"unknown mode {mode}")
+    pop = jax.lax.population_count(inter).astype(jnp.int32).sum(-1)
+    return inter, pop
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
 def fused_intersect_ref(
     bitmaps: jax.Array,
     left: jax.Array,

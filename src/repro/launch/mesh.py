@@ -16,7 +16,8 @@ import jax
 
 from ..dist.compat import AxisType, make_mesh
 
-__all__ = ["make_production_mesh", "make_mesh_named", "SINGLE_POD", "MULTI_POD"]
+__all__ = ["make_production_mesh", "make_mesh_named", "make_data_mesh",
+           "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = ((16, 16), ("data", "model"))
 MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
@@ -26,6 +27,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_data_mesh() -> jax.sharding.Mesh:
+    """One ``("data",)`` axis over every visible device — what the mining
+    CLIs build for the mesh-mapped engine backends (forced host devices
+    included: set XLA_FLAGS before launch)."""
+    return make_mesh((len(jax.devices()),), ("data",))
 
 
 def make_mesh_named(name: str) -> jax.sharding.Mesh:

@@ -20,7 +20,12 @@ def main(argv=None):
     ap.add_argument("--variant", default="v4",
                     choices=["v1", "v2", "v3", "v4", "v5", "v6"])
     ap.add_argument("--p", type=int, default=10)
-    ap.add_argument("--diffsets", action="store_true")
+    ap.add_argument("--backend", default="pallas",
+                    choices=["jnp", "pallas", "sharded", "tidsharded"])
+    ap.add_argument("--shard", default="pairs", choices=["pairs", "words"],
+                    help="mesh split under a device mesh (see DESIGN.md §7)")
+    ap.add_argument("--diffsets", action="store_true",
+                    help="dEclat diffsets (variant v6 only)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--min-conf", type=float, default=0.0,
                     help="if >0, also generate association rules")
@@ -30,10 +35,15 @@ def main(argv=None):
     cfg = EclatConfig(min_sup=args.min_sup, variant=args.variant, p=args.p,
                       tri_matrix=spec.tri_matrix or None,
                       use_diffsets=args.diffsets,
+                      backend=args.backend, shard=args.shard,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every_level=args.checkpoint_dir is not None)
+    mesh = None
+    if args.backend in ("sharded", "tidsharded") or args.shard == "words":
+        from .mesh import make_data_mesh
+        mesh = make_data_mesh()
     t0 = time.perf_counter()
-    res = mine(txns, spec.n_items, cfg)
+    res = mine(txns, spec.n_items, cfg, mesh=mesh)
     dt = time.perf_counter() - t0
     print(f"[mine] {spec.name} x{args.scale} min_sup={args.min_sup} "
           f"{args.variant}: {res.total} itemsets in {dt:.2f}s "

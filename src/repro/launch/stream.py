@@ -31,7 +31,10 @@ def main(argv=None):
     ap.add_argument("--drift-every", type=int, default=None,
                     help="re-seed the pattern pool every N batches")
     ap.add_argument("--backend", default="pallas",
-                    choices=["jnp", "pallas", "sharded"])
+                    choices=["jnp", "pallas", "sharded", "tidsharded"])
+    ap.add_argument("--shard", default="pairs", choices=["pairs", "words"],
+                    help="mesh split under a device mesh: candidate pairs "
+                         "(frontier replicated) or the frontier's word axis")
     ap.add_argument("--top-k", type=int, default=5)
     ap.add_argument("--min-conf", type=float, default=0.0,
                     help="if >0, also report association rules per slide")
@@ -40,11 +43,20 @@ def main(argv=None):
 
     spec = stream_spec(args.dataset)
     cfg = StreamConfig(min_sup=args.min_sup, n_blocks=args.n_blocks,
-                       block_txns=args.block_txns, backend=args.backend)
+                       block_txns=args.block_txns, backend=args.backend,
+                       shard=args.shard)
+    mesh = None
+    if args.backend in ("sharded", "tidsharded") or args.shard == "words":
+        from .mesh import make_data_mesh
+        mesh = make_data_mesh()
     service = StreamQueryService(
-        StreamingMiner(spec.n_items, cfg, keep_transactions=False))
+        StreamingMiner(spec.n_items, cfg, mesh=mesh,
+                       keep_transactions=False))
+    eff_shard = "words" if args.backend == "tidsharded" else args.shard
     print(f"[stream] {spec.name}: window={args.n_blocks}x{args.block_txns} "
-          f"txns, min_sup={args.min_sup}, backend={args.backend}")
+          f"txns, min_sup={args.min_sup}, backend={args.backend}"
+          + (f", shard={eff_shard} over {mesh.shape['data']} device(s)"
+             if mesh is not None else ""))
 
     for i, batch in enumerate(transaction_stream(
             args.dataset, args.block_txns, args.batches,

@@ -52,10 +52,11 @@ __all__ = ["StreamConfig", "WindowResult", "StreamingMiner"]
 class StreamConfig:
     """Knobs of the streaming miner (the EclatConfig of the windowed world)."""
 
-    min_sup: float                 # fraction (<1, of live window txns) or count
+    min_sup: float                 # float in (0,1] = fraction of live window txns; int >= 1 = count
     n_blocks: int = 16             # window capacity in micro-batch blocks
     block_txns: int = 1024         # txn columns per block (multiple of 32)
-    backend: str = "pallas"        # core.engine backend: jnp | pallas | sharded
+    backend: str = "pallas"        # core.engine backend: jnp | pallas | sharded | tidsharded
+    shard: str = "pairs"           # mesh split: "pairs" | "words" (word-sharded ring, DESIGN.md §7)
     partitioner: str = "greedy"    # equivalence-class placement (paper §4.5)
     p: int = 10                    # partitions for the class table
     max_k: Optional[int] = None
@@ -104,13 +105,18 @@ class StreamingMiner:
                  keep_transactions: bool = True):
         self.n_items = int(n_items)
         self.config = config
+        # word-sharded mode carries the ring itself at P(None, "data") so
+        # the window bitmap never fully lands on any one device
+        words_mode = (config.shard == "words" or config.backend == "tidsharded")
         self.ring = WindowRing(n_items, config.n_blocks, config.block_txns,
-                               keep_transactions=keep_transactions)
+                               keep_transactions=keep_transactions,
+                               mesh=mesh if words_mode else None)
         # incremental state: co-occurrence counts over the item universe;
         # per-item supports are its diagonal
         self.cooc = np.zeros((n_items, n_items), np.int64)
         self.engine = eng.resolve_engine(config.backend, mesh,
-                                         bucket_min=config.bucket_min)
+                                         bucket_min=config.bucket_min,
+                                         shard=config.shard)
         self._prev_frequent: Optional[np.ndarray] = None
 
     # -- incremental state maintenance --------------------------------------
@@ -211,8 +217,19 @@ class StreamingMiner:
                 mode=eng.MODE_TIDSET, min_sup=abs_min_sup,
                 device_of_pair=part_to_dev[table[iu]],
             )
-            # pairs were pre-filtered by the exact cached counts
-            assert res.mask.all(), "cached co-occurrence counts disagree with engine"
+            # pairs were pre-filtered by the exact cached counts, so the
+            # engine must confirm every one; disagreement means the
+            # incremental state is corrupt and every further window would be
+            # silently wrong.  A real exception, not an ``assert`` — this
+            # must also fire under ``python -O``.
+            if not res.mask.all():
+                bad = np.nonzero(~res.mask)[0]
+                raise RuntimeError(
+                    f"cached co-occurrence counts disagree with the engine "
+                    f"on {bad.size}/{res.mask.size} level-2 pair(s) "
+                    f"(first: items {int(items[iu[bad[0]]])},"
+                    f"{int(items[ju[bad[0]]])}) — incremental window state "
+                    f"is corrupt")
             sup2 = res.supports.astype(np.int64)
             lvl_bitmaps = res.bitmaps
         else:

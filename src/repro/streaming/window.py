@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import bitmap as bm
+from ..dist.sharding import padded_word_count, shard_words
 
 __all__ = ["WindowRing"]
 
@@ -57,10 +58,20 @@ class WindowRing:
     ``push(batch)`` packs the micro-batch into the next ring slot, evicting
     whatever block occupied it, and returns the (new, old) packed blocks so
     the caller can form incremental support/co-occurrence deltas.
+
+    With a ``mesh``, the device ring is carried **word-sharded**
+    (``P(None, shard_axis)``, DESIGN.md §7): each device holds every item
+    row but only a word slice, so a window bigger than one device's memory
+    stays resident — block writes update only the word span of the evicted
+    block, which lands on the shard(s) owning those words.  The word axis is
+    zero-padded to a shard multiple (pad words are popcount-neutral); the
+    host mirror stays at the logical ``n_words``.
     """
 
     def __init__(self, n_items: int, n_blocks: int, block_txns: int,
-                 keep_transactions: bool = True):
+                 keep_transactions: bool = True,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 shard_axis: str = "data"):
         if n_blocks < 1:
             raise ValueError("need at least one block")
         if block_txns < bm.WORD_BITS or block_txns % bm.WORD_BITS:
@@ -71,8 +82,19 @@ class WindowRing:
         self.block_txns = int(block_txns)
         self.wpb = block_txns // bm.WORD_BITS          # words per block
         self.n_words = self.n_blocks * self.wpb
+        self.mesh = mesh
+        self.shard_axis = shard_axis
         self.words = np.zeros((self.n_items, self.n_words), np.uint32)
-        self.device = jnp.zeros((self.n_items, self.n_words), jnp.uint32)
+        if mesh is not None:
+            self.n_shards = int(mesh.shape[shard_axis])
+            self.n_words_dev = padded_word_count(self.n_words, self.n_shards)
+            self.device = shard_words(
+                np.zeros((self.n_items, self.n_words_dev), np.uint32),
+                mesh, shard_axis)
+        else:
+            self.n_shards = 1
+            self.n_words_dev = self.n_words
+            self.device = jnp.zeros((self.n_items, self.n_words), jnp.uint32)
         self.block_counts = np.zeros(self.n_blocks, np.int64)  # txns per slot
         self.head = 0            # next slot to (over)write
         self.filled = 0          # slots holding live data
@@ -140,5 +162,34 @@ class WindowRing:
         return out
 
     def validate(self) -> None:
-        """Host mirror == device ring, supports consistent (test hook)."""
-        np.testing.assert_array_equal(np.asarray(self.device), self.words)
+        """Host mirror == device ring, per-slot supports consistent.
+
+        Raises ``RuntimeError`` on any violation — these are real integrity
+        checks (test hook *and* debugging aid), not ``assert`` statements,
+        so they hold under ``python -O`` too.
+        """
+        dev = np.asarray(self.device)
+        if dev.shape != (self.n_items, self.n_words_dev):
+            raise RuntimeError(
+                f"device ring shape drifted: expected "
+                f"{(self.n_items, self.n_words_dev)}, got {dev.shape}")
+        if not np.array_equal(dev[:, : self.n_words], self.words):
+            bad = np.nonzero((dev[:, : self.n_words] != self.words).any(0))[0]
+            raise RuntimeError(
+                f"device ring diverged from host mirror in {bad.size} word "
+                f"column(s), first at word {int(bad[0])}")
+        if self.n_words_dev > self.n_words and dev[:, self.n_words:].any():
+            raise RuntimeError("shard-padding words beyond n_words must stay "
+                               "all-zero but contain set bits")
+        if (self.block_counts < 0).any() or \
+                (self.block_counts > self.block_txns).any():
+            raise RuntimeError(f"block_counts out of [0, {self.block_txns}]: "
+                               f"{self.block_counts.tolist()}")
+        for slot in range(self.n_blocks):
+            span = self._slot_span(slot)
+            per_item = bm.popcount_np(self.words[:, span]).sum(-1)
+            if per_item.max(initial=0) > self.block_counts[slot]:
+                raise RuntimeError(
+                    f"slot {slot} holds an item with support "
+                    f"{int(per_item.max())} > its {int(self.block_counts[slot])} "
+                    f"live transactions — packed columns leaked past eviction")

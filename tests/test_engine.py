@@ -36,7 +36,26 @@ def _engine(backend):
     if backend == "sharded-pallas-kernel":
         return eng.make_engine("sharded", mesh=_mesh4(), bucket_min=8,
                                inner="pallas", interpret=True)
+    if backend == "tidsharded-jnp":
+        return eng.make_engine("tidsharded", mesh=_mesh4(), bucket_min=8,
+                               inner="jnp")
+    if backend == "tidsharded-pallas-kernel":
+        return eng.make_engine("tidsharded", mesh=_mesh4(), bucket_min=8,
+                               inner="pallas", interpret=True)
     raise AssertionError(backend)
+
+
+def _check_level(res, ref_bm, ref_sup, ref_mask, w):
+    """Shared parity assertions.  The tid-sharded backend zero-pads the word
+    axis to a shard multiple, so bitmap comparison is on [:, :w] plus an
+    all-zero check on any pad columns."""
+    np.testing.assert_array_equal(res.mask, ref_mask)
+    np.testing.assert_array_equal(res.supports, ref_sup)
+    # survivors live in rows [:S]; rows beyond are rung padding
+    assert res.bitmaps.shape[0] >= ref_bm.shape[0]
+    got = np.asarray(res.bitmaps)[: ref_bm.shape[0]]
+    np.testing.assert_array_equal(got[:, :w], ref_bm)
+    assert not got[:, w:].any()
 
 
 def _oracle(bitmaps, left, right, sup_left, mode, min_sup):
@@ -71,7 +90,8 @@ SHAPES_FAST = [(1, 1, 0), (1, 1, 1), (5, 3, 13), (64, 4, 37), (130, 9, 21)]
 SHAPES_INTERP = [(1, 1, 0), (1, 1, 1), (5, 3, 13), (9, 5, 7)]
 
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded-jnp"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded-jnp",
+                                     "tidsharded-jnp"])
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("p,w,q", SHAPES_FAST)
 def test_backend_parity(backend, mode, p, w, q):
@@ -81,15 +101,11 @@ def test_backend_parity(backend, mode, p, w, q):
     e = _engine(backend)
     res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
                    mode=mode, min_sup=min_sup, device_of_pair=dev)
-    np.testing.assert_array_equal(res.mask, ref_mask)
-    np.testing.assert_array_equal(res.supports, ref_sup)
-    # survivors live in rows [:S]; rows beyond are rung padding
-    assert res.bitmaps.shape[0] >= ref_bm.shape[0]
-    np.testing.assert_array_equal(
-        np.asarray(res.bitmaps)[: ref_bm.shape[0]], ref_bm)
+    _check_level(res, ref_bm, ref_sup, ref_mask, w)
 
 
-@pytest.mark.parametrize("backend", ["pallas-kernel", "sharded-pallas-kernel"])
+@pytest.mark.parametrize("backend", ["pallas-kernel", "sharded-pallas-kernel",
+                                     "tidsharded-pallas-kernel"])
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("p,w,q", SHAPES_INTERP)
 def test_pallas_kernel_parity(backend, mode, p, w, q):
@@ -100,11 +116,25 @@ def test_pallas_kernel_parity(backend, mode, p, w, q):
     e = _engine(backend)
     res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
                    mode=mode, min_sup=min_sup, device_of_pair=dev)
-    np.testing.assert_array_equal(res.mask, ref_mask)
-    np.testing.assert_array_equal(res.supports, ref_sup)
-    assert res.bitmaps.shape[0] >= ref_bm.shape[0]
-    np.testing.assert_array_equal(
-        np.asarray(res.bitmaps)[: ref_bm.shape[0]], ref_bm)
+    _check_level(res, ref_bm, ref_sup, ref_mask, w)
+
+
+def test_sharded_rejects_out_of_range_device_ids():
+    """Regression: an out-of-range device id used to leave slot_of_pair
+    uninitialized (np.empty garbage) and return wrong supports silently."""
+    bitmaps, left, right, sup_left, _ = _case(16, 4, 9, seed=3)
+    e = _engine("sharded-jnp")  # 4-device mesh
+    for bad in (np.full(9, 4, np.int64),                   # == n_devices
+                np.array([0, 1, 2, 3, 0, 1, 2, 3, 17]),    # far out
+                np.array([0, -1, 0, 0, 0, 0, 0, 0, 0])):   # negative
+        with pytest.raises(ValueError, match="device_of_pair"):
+            e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                     mode=eng.MODE_TIDSET, min_sup=1,
+                     device_of_pair=bad)
+    with pytest.raises(ValueError, match="device_of_pair"):
+        e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                 mode=eng.MODE_TIDSET, min_sup=1,
+                 device_of_pair=np.zeros(5, np.int64))      # wrong shape
 
 
 def test_kernel_multi_word_blocks():
@@ -180,11 +210,14 @@ def test_mine_legacy_batched_alias():
 # ---------------------------------------------------------------------------
 
 def test_registry_surface():
-    assert set(eng.available_backends()) >= {"jnp", "pallas", "sharded"}
+    assert set(eng.available_backends()) >= {"jnp", "pallas", "sharded",
+                                             "tidsharded"}
     with pytest.raises(ValueError, match="unknown engine backend"):
         eng.make_engine("nope")
     with pytest.raises(ValueError, match="requires a mesh"):
         eng.make_engine("sharded")
+    with pytest.raises(ValueError, match="requires a mesh"):
+        eng.make_engine("tidsharded")
 
 
 def test_pair_buffers_ladder_reuse():

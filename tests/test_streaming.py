@@ -95,9 +95,9 @@ def _mesh4():
     return make_mesh((4,), ("data",))
 
 
-@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded"])
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded", "tidsharded"])
 def test_windowed_matches_batch_mine(backend):
-    mesh = _mesh4() if backend == "sharded" else None
+    mesh = _mesh4() if backend in ("sharded", "tidsharded") else None
     cfg = StreamConfig(min_sup=5, n_blocks=3, block_txns=32,
                        backend=backend, bucket_min=16)
     miner = StreamingMiner(N_ITEMS, cfg, mesh=mesh)
@@ -110,8 +110,8 @@ def test_windowed_matches_batch_mine(backend):
                          mesh=None)
         assert res.n_txn == len(window)
         assert res.support_map() == batch_res.support_map(), f"slide {i}"
-    if backend == "sharded":
-        assert miner.engine.name == "sharded"
+    if backend in ("sharded", "tidsharded"):
+        assert miner.engine.name == backend
 
 
 def test_windowed_matches_batch_fractional_min_sup():
@@ -184,6 +184,72 @@ def test_empty_window_and_empty_batches():
     assert res.total == 0 and res.support_map() == {}
     res = miner.advance([])
     assert res.total == 0
+
+
+# ---------------------------------------------------------------------------
+# invariant checks are real exceptions (they must survive `python -O`)
+# ---------------------------------------------------------------------------
+
+def _corrupt_and_mine(miner):
+    """Items 0/1/2 are all frequent but 1 and 2 never co-occur; inflating
+    the cached count makes the prefilter pass a pair the engine refutes."""
+    miner.push([[0, 1]] * 8 + [[0, 2]] * 8)
+    miner.cooc[1, 2] = miner.cooc[2, 1] = 50
+    return miner.mine_window()
+
+
+def test_cached_count_disagreement_raises():
+    """Regression: the level-2 cross-check was a bare ``assert`` — under
+    ``python -O`` a corrupt count matrix produced silently wrong windows."""
+    cfg = StreamConfig(min_sup=5, n_blocks=2, block_txns=32)
+    miner = StreamingMiner(N_ITEMS, cfg)
+    with pytest.raises(RuntimeError, match="co-occurrence counts disagree"):
+        _corrupt_and_mine(miner)
+
+
+def test_ring_validate_raises_on_divergence():
+    ring = WindowRing(N_ITEMS, n_blocks=2, block_txns=32)
+    ring.push(_batches(1, 20, seed=13)[0])
+    ring.validate()
+    ring.words[0, 0] ^= np.uint32(1)            # corrupt the host mirror
+    with pytest.raises(RuntimeError, match="diverged"):
+        ring.validate()
+    ring.words[0, 0] ^= np.uint32(1)
+    ring.block_counts[0] = -1                   # corrupt the occupancy
+    with pytest.raises(RuntimeError, match="block_counts"):
+        ring.validate()
+    ring.block_counts[0] = 0                    # support > live txns in slot
+    with pytest.raises(RuntimeError, match="live transactions"):
+        ring.validate()
+
+
+def test_invariants_fire_under_python_O():
+    """The whole point of the fix: run the corruption scenario in a
+    ``python -O`` subprocess (asserts stripped) and require the exception."""
+    import subprocess
+    import sys
+    snippet = (
+        "import numpy as np\n"
+        "from repro.streaming import StreamConfig, StreamingMiner\n"
+        "assert False, 'proof this build strips asserts'  # -O removes this\n"
+        "miner = StreamingMiner(12, StreamConfig(min_sup=5, n_blocks=2, "
+        "block_txns=32))\n"
+        "miner.push([[0, 1]] * 8 + [[0, 2]] * 8)\n"
+        "miner.cooc[1, 2] = miner.cooc[2, 1] = 50\n"
+        "try:\n"
+        "    miner.mine_window()\n"
+        "except RuntimeError as e:\n"
+        "    print('RAISED:', type(e).__name__)\n"
+        "else:\n"
+        "    raise SystemExit('invariant did NOT fire under -O')\n"
+    )
+    import os
+    env = dict(os.environ, PYTHONPATH="src" + os.pathsep + ".")
+    r = subprocess.run([sys.executable, "-O", "-c", snippet],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stderr
+    assert "RAISED: RuntimeError" in r.stdout
 
 
 # ---------------------------------------------------------------------------

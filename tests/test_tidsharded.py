@@ -1,0 +1,213 @@
+"""Word-sharded (tid-axis) execution mode: routing, placement, memory, and
+bit-exact parity with the single-device backends (DESIGN.md §7).
+
+The contract under test: the frontier bitmap is carried as ``P(None,
+"data")`` (never fully replicated), each device intersects and popcounts its
+word shard, supports are psum-reduced, survivor compaction stays shard-local
+— and none of that is visible in the mined itemsets, for batch v1–v6 and for
+streaming windows.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import EclatConfig, bruteforce_fim, mine
+from repro.core import engine as eng
+from repro.dist.compat import make_mesh
+from repro.streaming import StreamConfig, StreamingMiner
+
+
+def _mesh(n):
+    return make_mesh((n,), ("data",), devices=jax.devices()[:n])
+
+
+def make_db(seed=7, n_items=10, n_txn=150):
+    rng = np.random.default_rng(seed)
+    txns = []
+    for _ in range(n_txn):
+        t = set(rng.choice(n_items, size=rng.integers(3, 7), replace=False).tolist())
+        if rng.random() < 0.5:
+            t |= {0, 1, 2, 3}
+        txns.append(sorted(t))
+    return txns
+
+
+DB = make_db()
+ORACLE = bruteforce_fim(DB, min_sup=25)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_resolve_engine_routes_shard_modes():
+    mesh = _mesh(4)
+    assert eng.resolve_engine("pallas", mesh, shard="pairs").name == "sharded"
+    assert eng.resolve_engine("pallas", mesh, shard="words").name == "tidsharded"
+    assert eng.resolve_engine("tidsharded", mesh).name == "tidsharded"
+    e = eng.resolve_engine("jnp", mesh, shard="words")
+    assert e.name == "tidsharded" and e.inner == "jnp"
+    # graceful degrade without a mesh, like the sharded backend
+    assert eng.resolve_engine("tidsharded", None).name == "pallas"
+    with pytest.raises(ValueError, match="shard mode"):
+        eng.resolve_engine("pallas", mesh, shard="wordz")
+
+
+def test_mine_config_shard_words_routes_to_tidsharded():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v4", p=4,
+                                   shard="words"), mesh=_mesh(4))
+    assert res.stats["backend"] == "tidsharded"
+    assert res.stats["n_word_shards"] == 4
+    assert res.support_map() == ORACLE
+
+
+# ---------------------------------------------------------------------------
+# batch parity: v1–v6 on the 4-device mesh, both inner executors
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["v1", "v2", "v3", "v4", "v5", "v6"])
+@pytest.mark.parametrize("inner", ["jnp", "pallas"])
+def test_mine_tidsharded_matches_oracle(variant, inner):
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant=variant, p=3,
+                                   use_diffsets=(variant == "v6"),
+                                   backend=inner, shard="words",
+                                   bucket_min=32), mesh=_mesh(4))
+    assert res.stats["backend"] == "tidsharded"
+    assert res.support_map() == ORACLE
+
+
+def test_mine_tidsharded_no_trimatrix():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v5", p=3,
+                                   tri_matrix=False, shard="words",
+                                   bucket_min=32), mesh=_mesh(4))
+    assert res.support_map() == ORACLE
+
+
+# ---------------------------------------------------------------------------
+# placement: the frontier is word-sharded, not replicated
+# ---------------------------------------------------------------------------
+
+def test_frontier_is_word_sharded_not_replicated():
+    rng = np.random.default_rng(0)
+    bitmaps = rng.integers(0, 2**32, (32, 8), dtype=np.uint32)
+    left = rng.integers(0, 32, 24).astype(np.int32)
+    right = rng.integers(0, 32, 24).astype(np.int32)
+    sup_left = np.zeros(24, np.int32)
+    mesh = _mesh(4)
+    e = eng.make_engine("tidsharded", mesh=mesh, bucket_min=8, inner="jnp")
+    res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                   mode=eng.MODE_TIDSET, min_sup=1)
+    sh = res.bitmaps.sharding
+    assert isinstance(sh, NamedSharding)
+    assert sh.spec == P(None, "data")
+    # each device materializes exactly 1/4 of the frontier bytes
+    assert res.bitmaps.addressable_shards[0].data.nbytes * 4 == res.bitmaps.nbytes
+    # feeding the sharded frontier back in (the bottom-up loop) keeps it placed
+    res2 = e.expand(res.bitmaps, np.zeros(4, np.int32),
+                    np.ones(4, np.int32) % max(res.supports.shape[0], 1),
+                    res.supports[:1].repeat(4).astype(np.int32),
+                    mode=eng.MODE_TIDSET, min_sup=1)
+    assert res2.bitmaps.sharding.spec == P(None, "data")
+
+
+def test_per_device_bytes_shrink_with_mesh_size():
+    """The point of the mode: per-device frontier memory ~ total/n_shards."""
+    rng = np.random.default_rng(1)
+    bitmaps = rng.integers(0, 2**32, (64, 16), dtype=np.uint32)
+    left = rng.integers(0, 64, 32).astype(np.int32)
+    right = rng.integers(0, 64, 32).astype(np.int32)
+    sup_left = np.zeros(32, np.int32)
+    per_dev = {}
+    sups = {}
+    for n in (1, 2, 4):
+        e = eng.make_engine("tidsharded", mesh=_mesh(n), bucket_min=8,
+                            inner="jnp")
+        res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                       mode=eng.MODE_TIDSET, min_sup=1)
+        per_dev[n] = res.bitmaps.addressable_shards[0].data.nbytes
+        sups[n] = res.supports.tolist()
+    assert sups[1] == sups[2] == sups[4]          # unchanged output
+    assert per_dev[2] == per_dev[1] // 2
+    assert per_dev[4] == per_dev[1] // 4
+
+
+def test_empty_frontier_and_single_item():
+    """The edge shapes from test_engine, through the full tidsharded expand."""
+    mesh = _mesh(4)
+    e = eng.make_engine("tidsharded", mesh=mesh, bucket_min=8, inner="jnp")
+    bm = jnp.asarray(np.random.default_rng(2).integers(
+        0, 2**32, (1, 1), dtype=np.uint32))
+    res = e.expand(bm, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                   np.zeros(0, np.int32), mode=eng.MODE_TIDSET, min_sup=1)
+    assert res.mask.shape == (0,) and res.supports.shape == (0,)
+    res = e.expand(bm, np.zeros(1, np.int32), np.zeros(1, np.int32),
+                   np.zeros(1, np.int32), mode=eng.MODE_TIDSET, min_sup=1)
+    assert res.mask.shape == (1,)
+
+
+# ---------------------------------------------------------------------------
+# streaming windows: sharded ring + tidsharded engine, bit-exact
+# ---------------------------------------------------------------------------
+
+def _batches(n_batches, batch_txns, seed=0, n_items=12):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        batch = []
+        for _ in range(batch_txns):
+            t = set(rng.choice(n_items, size=rng.integers(3, 7),
+                               replace=False).tolist())
+            if rng.random() < 0.5:
+                t |= {0, 1, 2}
+            batch.append(sorted(t))
+        out.append(batch)
+    return out
+
+
+@pytest.mark.parametrize("route", ["shard_words", "backend_name"])
+def test_streaming_tidsharded_matches_batch_mine(route):
+    mesh = _mesh(4)
+    if route == "shard_words":
+        cfg = StreamConfig(min_sup=5, n_blocks=3, block_txns=32,
+                           backend="pallas", shard="words", bucket_min=16)
+    else:
+        cfg = StreamConfig(min_sup=5, n_blocks=3, block_txns=32,
+                           backend="tidsharded", bucket_min=16)
+    miner = StreamingMiner(12, cfg, mesh=mesh)
+    assert miner.engine.name == "tidsharded"
+    # the window ring itself is word-sharded — the window never fully
+    # materializes on one device
+    assert miner.ring.device.sharding.spec == P(None, "data")
+    for i, batch in enumerate(_batches(6, 28, seed=4)):
+        res = miner.advance(batch)
+        miner.ring.validate()
+        window = miner.window_transactions()
+        batch_res = mine(window, 12, EclatConfig(min_sup=5, variant="v4",
+                                                 p=4, backend="jnp",
+                                                 bucket_min=16))
+        assert res.support_map() == batch_res.support_map(), f"slide {i}"
+
+
+def test_streaming_tidsharded_empty_window():
+    miner = StreamingMiner(12, StreamConfig(min_sup=2, n_blocks=2,
+                                            block_txns=32, shard="words"),
+                           mesh=_mesh(4))
+    res = miner.mine_window()
+    assert res.total == 0 and res.support_map() == {}
+    res = miner.advance([])
+    assert res.total == 0
+
+
+def test_sharded_ring_pads_word_axis():
+    """3 blocks x 1 word/block = 3 words on a 4-shard mesh -> device width 4,
+    host mirror stays logical, pad words stay zero across slides."""
+    miner = StreamingMiner(12, StreamConfig(min_sup=2, n_blocks=3,
+                                            block_txns=32, shard="words"),
+                           mesh=_mesh(4))
+    assert miner.ring.n_words == 3 and miner.ring.n_words_dev == 4
+    for batch in _batches(5, 20, seed=9):
+        miner.advance(batch)
+        miner.ring.validate()
+    assert not np.asarray(miner.ring.device)[:, 3:].any()
