@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
   streaming            incremental vs full window re-mine -> BENCH_streaming.json
   shardscale           word-sharded frontier parity + per-device memory
                        vs mesh size -> BENCH_shardscale.json
+  gridscale            2D (pairs x words) grid parity + per-axis
+                       work/memory vs the 1D modes -> BENCH_gridscale.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
@@ -30,6 +32,7 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))  # `repro`
 from benchmarks.engine_bench import engine_bench
 from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
+from benchmarks.gridscale_bench import gridscale_bench
 from benchmarks.micro import kernel_microbench, moe_balance
 from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
@@ -43,6 +46,7 @@ TABLES = {
     "engine": engine_bench,
     "streaming": streaming_bench,
     "shardscale": shardscale_bench,
+    "gridscale": gridscale_bench,
     "moe_balance": moe_balance,
 }
 
@@ -59,8 +63,10 @@ def main() -> None:
         "engine": functools.partial(engine_bench, smoke=True),
         "streaming": functools.partial(streaming_bench, smoke=True),
         "shardscale": functools.partial(shardscale_bench, smoke=True),
+        "gridscale": functools.partial(gridscale_bench, smoke=True),
     } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
+    failures = []
     for name, fn in tables.items():
         if args.only and name != args.only:
             continue
@@ -68,7 +74,11 @@ def main() -> None:
             fn(rows)
         except Exception as e:  # keep the harness going; report the failure
             rows.append(f"{name},0,ERROR={type(e).__name__}:{e}")
+            failures.append(name)
     print("\n".join(rows))
+    if failures:  # ...but a failed table (e.g. a parity regression raised
+        # by a bench harness) must still fail the run, and CI with it
+        raise SystemExit(f"benchmark table(s) failed: {failures}")
 
 
 if __name__ == "__main__":

@@ -176,6 +176,12 @@ def shardscale_bench(out: List[str], smoke: bool = False) -> dict:
     report = json.loads(proc.stdout.strip().splitlines()[-1])
     with open(BENCH_PATH, "w") as f:
         json.dump(report, f, indent=2)
+    # parity is the acceptance-critical claim — a regression must fail the
+    # harness (and CI), not just flip a flag inside the JSON artifact
+    if not report["parity_ok"]:
+        bad = [k for k, v in report["parity"].items() if not v["identical"]]
+        raise RuntimeError(f"shardscale parity regression: {bad} not "
+                           f"bit-identical (see {BENCH_PATH})")
     for variant in VARIANTS:
         p = report["parity"][variant]
         out.append(_row(f"shardscale/parity/{variant}",

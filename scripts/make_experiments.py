@@ -8,8 +8,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.analysis.report import (dryrun_table, fim_table, load_bench,
-                                   load_reports, perf_log_table,
+from repro.analysis.report import (dryrun_table, fim_table, gridscale_table,
+                                   load_bench, load_reports, perf_log_table,
                                    roofline_table, shardscale_table,
                                    streaming_table)
 
@@ -69,6 +69,12 @@ def main():
         parts.append("\n\n## §Shard-scale (word-sharded frontier: parity + "
                      "per-device memory)\n")
         parts.append(shardscale_table(shardscale))
+
+    gridscale = load_bench("BENCH_gridscale.json")
+    if gridscale:
+        parts.append("\n\n## §Grid-scale (2D pairs x words mesh vs the 1D "
+                     "modes)\n")
+        parts.append(gridscale_table(gridscale))
 
     if reports:
         parts.append("\n\n## §Dry-run (compile proof, memory, collective schedule)\n")

@@ -93,9 +93,9 @@ class EclatConfig:
     tri_matrix: Optional[bool] = None   # None = auto (paper's triMatrixMode)
     tri_matrix_max_items: int = 4096    # auto threshold (paper: item-id range)
     use_diffsets: bool = False          # v6 only (dEclat); other variants reject it
-    backend: str = "pallas"             # jnp | pallas | sharded | tidsharded ("batched" = legacy alias)
-    shard: str = "pairs"                # mesh split: "pairs" (frontier replicated) | "words" (tid axis, DESIGN.md §7)
-    max_k: Optional[int] = None
+    backend: str = "pallas"             # jnp | pallas | sharded | tidsharded | grid ("batched" = legacy alias)
+    shard: str = "pairs"                # mesh split: "pairs" (frontier replicated) | "words" (tid axis, DESIGN.md §7) | "grid" (pairs x words 2D mesh, DESIGN.md §8)
+    max_k: Optional[int] = None         # deepest itemset length to mine (>= 1); None = unbounded
     bucket_min: int = 1024              # pair-buffer bucket-ladder floor
     chunk_pairs: int = 1 << 18          # level-2 chunking when tri-matrix off
     checkpoint_dir: Optional[str] = None
@@ -206,7 +206,7 @@ def mine(
     mesh: Optional[jax.sharding.Mesh] = None,
 ) -> EclatResult:
     """Mine all frequent itemsets.  ``mesh`` enables the mesh-mapped
-    backends (``config.shard`` picks pair- vs word-sharding)."""
+    backends (``config.shard`` picks pair-, word-, or 2D grid-sharding)."""
     spec = VARIANTS[config.variant]
     if config.use_diffsets and config.variant != "v6":
         # every variant but v6 mines tidsets; silently dropping the flag
@@ -214,6 +214,9 @@ def mine(
         raise ValueError(
             f"use_diffsets is only supported by variant 'v6' (dEclat); "
             f"variant {config.variant!r} would silently ignore it")
+    if config.max_k is not None and config.max_k < 1:
+        raise ValueError(f"max_k must be >= 1 (or None for unbounded), "
+                         f"got {config.max_k}")
     t_start = time.perf_counter()
     stats: dict = {"variant": config.variant, "phase_s": {}}
 
@@ -241,8 +244,20 @@ def mine(
                                bucket_min=config.bucket_min,
                                shard=config.shard)
     stats["backend"] = execu.name
-    # partition -> device round robin (sharded backend only)
+    # partition -> device round robin (mesh-mapped backends' pair axis)
     part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
+
+    # balance of the *estimated* class work that drove partitioning (the
+    # pair_work model the partitioners optimized), not a uniform per-pair
+    # weight — so the reported efficiency reflects the actual assignment.
+    # Recorded up front so every return path (max_k=1, single frequent
+    # item, full run) carries the same stats shape.
+    if n_classes > 0:
+        pstats = partition_stats(table, est, eff_p)
+        stats["partition_balance"] = {
+            **{k_: v for k_, v in pstats.items() if k_ != "loads"},
+            "estimated_loads": pstats["loads"].tolist(),
+        }
 
     lvl1_partition = np.concatenate([table, [table[-1] if n_classes else 0]])[:n1] if n1 else np.zeros(0, np.int64)
     store.add_level(
@@ -254,7 +269,11 @@ def mine(
             partition=lvl1_partition,
         )
     )
-    if n1 < 2:
+    # max_k bounds every level, including 2: with max_k=1 the frequent items
+    # are the whole answer (the regression was recording level 2 regardless)
+    max_k = n1 if config.max_k is None else config.max_k
+    if n1 < 2 or max_k < 2:
+        stats.update(execu.stats())
         stats["total_s"] = time.perf_counter() - t_start
         return EclatResult(store=store, db=db, stats=stats)
 
@@ -278,12 +297,25 @@ def mine(
         counts2 = cooccurrence_counts(bitmaps)
         iu, ju, _ = frequent_pairs(counts2, abs_min_sup)
         # materialize bitmaps only for the survivors; every pre-filtered pair
-        # passes the engine's threshold again, so the mask is all-true
+        # must pass the engine's threshold again
         res = execu.expand(
             bitmaps, iu.astype(np.int32), ju.astype(np.int32), sup1[iu],
             mode=mode2, min_sup=abs_min_sup,
             device_of_pair=part_to_dev[table[iu]] if iu.size else None,
         )
+        # the level-2 LevelRecord below aligns iu/ju (all pre-filtered
+        # pairs) with res.supports (survivors only) on the assumption that
+        # the two sets are identical; a corrupt triangular count matrix
+        # breaks that silently, misaligning every deeper level.  Same
+        # contract as the streaming miner's cached-count check — a real
+        # exception, not an ``assert``, so it fires under ``python -O``.
+        if iu.size and not res.mask.all():
+            bad = np.nonzero(~res.mask)[0]
+            raise RuntimeError(
+                f"triangular-matrix co-occurrence counts disagree with the "
+                f"engine on {bad.size}/{res.mask.size} level-2 pair(s) "
+                f"(first: item ranks {int(iu[bad[0]])},{int(ju[bad[0]])}) — "
+                f"the tri-matrix pass is corrupt")
         sup2 = res.supports.astype(np.int32)
         lvl_bitmaps = res.bitmaps
     else:
@@ -338,20 +370,10 @@ def mine(
 
     run_bottom_up(execu, store, lvl_bitmaps, class_id, item_rank, partition,
                   support, abs_min_sup=abs_min_sup, mode=mode_k,
-                  max_k=config.max_k or n1, part_to_dev=part_to_dev,
+                  max_k=max_k, part_to_dev=part_to_dev,
                   on_level=on_level)
     stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
 
-    # ---- balance bookkeeping ----------------------------------------------
-    # balance of the *estimated* class work that drove partitioning (the
-    # pair_work model the partitioners optimized), not a uniform per-pair
-    # weight — so the reported efficiency reflects the actual assignment
-    if n_classes > 0:
-        pstats = partition_stats(table, est, eff_p)
-        stats["partition_balance"] = {
-            **{k_: v for k_, v in pstats.items() if k_ != "loads"},
-            "estimated_loads": pstats["loads"].tolist(),
-        }
     stats.update(execu.stats())
     stats["total_s"] = time.perf_counter() - t_start
     return EclatResult(store=store, db=db, stats=stats)

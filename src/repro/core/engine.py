@@ -30,6 +30,22 @@ Backends (``register_backend`` registry, selected by ``EclatConfig.backend``):
            compaction stays shard-local.  Per-device frontier memory is
            total/n_shards, so windows larger than one device's memory stay
            minable (DESIGN.md §7).  Selected by ``shard="words"``.
+  grid     grid-sharded execution on a 2D ``("class", "data")`` mesh:
+           candidate pairs split over the class axis (as in ``sharded``)
+           AND the frontier's word axis split over the data axis (as in
+           ``tidsharded``), so per-device pair work drops ~1/n_class and
+           per-device frontier memory ~1/n_data at the same time — the
+           first backend that composes both shard_map axes (DESIGN.md §8).
+           Selected by ``shard="grid"``.
+
+Axis ownership (who interprets what): ``device_of_pair`` always routes over
+the backend's *pair* axis (``n_devices`` wide — the class axis for
+``sharded``/``grid``, trivial for the rest); ``prepare_frontier``/``_take``
+own the *word* axis placement (``P(None, data)`` for ``tidsharded``/
+``grid``, identity otherwise); ``_compact`` is axis-agnostic and delegates
+the row gather to ``_take``.  The shared helpers ``group_pairs_by_device``
+and ``_WordShardedFrontierMixin`` implement one axis each, so a backend
+composes them instead of copy-pasting an engine.
 
 Bucket ladder: pair batches are padded up to a power-of-two ladder
 (``bucket_min * 2**k``), so every XLA/Mosaic executable is compiled once per
@@ -48,7 +64,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..dist.compat import shard_map, shard_map_unchecked
-from ..dist.sharding import shard_words, word_shard_spec
+from ..dist.sharding import (grid_block_spec, grid_pair_spec, shard_words,
+                             word_shard_spec)
 from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
                                        MODE_TIDSET, fused_intersect,
                                        fused_intersect_partial,
@@ -58,7 +75,7 @@ from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
     "LevelResult", "Engine", "JnpEngine", "PallasEngine", "ShardedEngine",
-    "TidShardedEngine",
+    "TidShardedEngine", "GridShardedEngine", "group_pairs_by_device",
     "register_backend", "available_backends", "make_engine", "resolve_engine",
 ]
 
@@ -123,6 +140,59 @@ class PairBuffers:
         return qb, l, r, s
 
 
+def group_pairs_by_device(
+    left: np.ndarray,
+    right: np.ndarray,
+    sup_left: np.ndarray,
+    device_of_pair: Optional[np.ndarray],
+    n_devices: int,
+    floor: int,
+) -> Tuple[int, np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Group candidate pairs by their assigned pair-axis slot and pad every
+    slot's block to a shared ladder rung.
+
+    The pair-axis half of the mesh-mapped backends (``sharded`` distributes
+    over its one axis, ``grid`` over its class axis): returns ``(qmax, lpad,
+    rpad, spad, slot_of_pair, counts)`` where the ``(n_devices, qmax)`` pad
+    blocks hold each device's pairs, ``slot_of_pair[q] = dev * qmax + slot``
+    maps input pair order to padded-block position, and ``counts`` is the
+    per-device pair load (the balance stats input).  Out-of-range device ids
+    are refused up front: one would fall outside the grouping loop and leave
+    its ``slot_of_pair`` entry uninitialized — garbage slots, silently wrong
+    supports.
+    """
+    q = int(left.shape[0])
+    d = int(n_devices)
+    if device_of_pair is None:
+        device_of_pair = np.zeros(q, np.int64)
+    device_of_pair = np.asarray(device_of_pair, np.int64)
+    if device_of_pair.shape != (q,):
+        raise ValueError(f"device_of_pair must be shape ({q},), got "
+                         f"{device_of_pair.shape}")
+    if (device_of_pair < 0).any() or (device_of_pair >= d).any():
+        bad = device_of_pair[(device_of_pair < 0) | (device_of_pair >= d)]
+        raise ValueError(
+            f"device_of_pair contains ids outside [0, {d}) for this "
+            f"{d}-device pair axis: {np.unique(bad).tolist()[:8]}")
+    order = np.argsort(device_of_pair, kind="stable")
+    counts = np.bincount(device_of_pair, minlength=d)
+    qmax = bucket_size(int(counts.max()), floor)
+    lpad = np.zeros((d, qmax), np.int32)
+    rpad = np.zeros((d, qmax), np.int32)
+    spad = np.zeros((d, qmax), np.int32)
+    slot_of_pair = np.empty(q, np.int64)
+    off = 0
+    for dev in range(d):
+        c = int(counts[dev])
+        idx = order[off: off + c]
+        lpad[dev, :c] = left[idx]
+        rpad[dev, :c] = right[idx]
+        spad[dev, :c] = sup_left[idx]
+        slot_of_pair[idx] = dev * qmax + np.arange(c)
+        off += c
+    return qmax, lpad, rpad, spad, slot_of_pair, counts
+
+
 # ---------------------------------------------------------------------------
 # backend registry
 # ---------------------------------------------------------------------------
@@ -152,14 +222,15 @@ def make_engine(
 ) -> "Engine":
     """Construct a backend by registry name.
 
-    ``sharded`` / ``tidsharded`` require a mesh; ``interpret`` forces the
-    Pallas kernel's interpreter (tests) instead of the TPU/ref dispatch.
+    ``sharded`` / ``tidsharded`` / ``grid`` require a mesh (``grid`` a 2D
+    one with ``("class", "data")`` axes); ``interpret`` forces the Pallas
+    kernel's interpreter (tests) instead of the TPU/ref dispatch.
     """
     cls = BACKENDS.get(backend)
     if cls is None:
         raise ValueError(f"unknown engine backend {backend!r}; "
                          f"available: {available_backends()}")
-    if backend in ("sharded", "tidsharded"):
+    if backend in ("sharded", "tidsharded", "grid"):
         if mesh is None:
             raise ValueError(f"{backend} backend requires a mesh")
         return cls(mesh, bucket_min=bucket_min, inner=inner,
@@ -179,31 +250,46 @@ def resolve_engine(
     """Map a (backend name, mesh, shard mode) request onto an engine.
 
     A mesh always means a mesh-mapped backend, with the named single-device
-    backend as its inner executor; ``shard`` picks which axis the mesh
-    splits: ``"pairs"`` (ShardedEngine — candidate pairs distributed, the
-    frontier replicated; the paper's executor mapping) or ``"words"``
+    backend as its inner executor; ``shard`` picks which axis (or axes) the
+    mesh splits: ``"pairs"`` (ShardedEngine — candidate pairs distributed,
+    the frontier replicated; the paper's executor mapping), ``"words"``
     (TidShardedEngine — the frontier's word axis distributed, pairs
-    replicated; DESIGN.md §7).  ``"batched"`` and ``"auto"`` are legacy
-    aliases for the single-device default (pallas); ``"sharded"`` /
-    ``"tidsharded"`` without a mesh degrade gracefully to that default.
-    Both the batch driver (``core.eclat.mine``) and the streaming miner
-    (``repro.streaming``) resolve their executors here.
+    replicated; DESIGN.md §7), or ``"grid"`` (GridShardedEngine — pairs
+    over a ``"class"`` axis AND words over a ``"data"`` axis of a 2D mesh;
+    DESIGN.md §8).  ``"batched"`` and ``"auto"`` are legacy aliases for the
+    single-device default (pallas); ``"sharded"`` / ``"tidsharded"`` /
+    ``"grid"`` without a mesh degrade gracefully to that default.  Naming a
+    mesh-mapped backend implies its shard mode (``sharded`` -> pairs,
+    ``tidsharded`` -> words, ``grid`` -> grid); combining one with a
+    *different* non-default ``shard`` is contradictory and rejected rather
+    than silently resolved to either side.  Both the batch driver
+    (``core.eclat.mine``) and the streaming miner (``repro.streaming``)
+    resolve their executors here.
     """
-    if shard not in ("pairs", "words"):
+    shard_to_backend = {"pairs": "sharded", "words": "tidsharded",
+                        "grid": "grid"}
+    if shard not in shard_to_backend:
         raise ValueError(f"unknown shard mode {shard!r}; "
-                         "expected 'pairs' or 'words'")
+                         "expected 'pairs', 'words' or 'grid'")
     if backend in ("batched", "auto"):
         backend = "pallas"
-    if backend == "tidsharded":
-        shard = "words"
-    if mesh is not None or backend in ("sharded", "tidsharded"):
+    implied = {"sharded": "pairs", "tidsharded": "words",
+               "grid": "grid"}.get(backend)
+    if implied is not None:
+        # shard="pairs" is the config default, so only an explicit
+        # disagreement is a conflict
+        if shard not in ("pairs", implied):
+            raise ValueError(
+                f"backend {backend!r} implies shard={implied!r} but "
+                f"shard={shard!r} was requested; drop one of the two")
+        shard = implied
+    if mesh is not None or backend in ("sharded", "tidsharded", "grid"):
         if mesh is None:
             backend = "pallas"
         else:
             inner = backend if backend in ("jnp", "pallas") else "pallas"
-            name = "tidsharded" if shard == "words" else "sharded"
-            return make_engine(name, mesh=mesh, bucket_min=bucket_min,
-                               inner=inner)
+            return make_engine(shard_to_backend[shard], mesh=mesh,
+                               bucket_min=bucket_min, inner=inner)
     return make_engine(backend, bucket_min=bucket_min)
 
 
@@ -404,39 +490,9 @@ class ShardedEngine(Engine):
             return self._empty(bitmaps)
         self.n_intersections += q
         d = self.n_devices
-        if device_of_pair is None:
-            device_of_pair = np.zeros(q, np.int64)
-        device_of_pair = np.asarray(device_of_pair, np.int64)
-        if device_of_pair.shape != (q,):
-            raise ValueError(f"device_of_pair must be shape ({q},), got "
-                             f"{device_of_pair.shape}")
-        # an out-of-range device id would fall outside the per-device
-        # grouping loop below and leave its slot_of_pair entry uninitialized
-        # — garbage slots, silently wrong supports — so refuse it up front
-        if (device_of_pair < 0).any() or (device_of_pair >= d).any():
-            bad = device_of_pair[(device_of_pair < 0) | (device_of_pair >= d)]
-            raise ValueError(
-                f"device_of_pair contains ids outside [0, {d}) for this "
-                f"{d}-device mesh: {np.unique(bad).tolist()[:8]}")
-        # group pairs by the device their equivalence class lives on and pad
-        # every device block to a shared ladder rung
-        order = np.argsort(device_of_pair, kind="stable")
-        counts = np.bincount(device_of_pair, minlength=d)
+        qmax, lpad, rpad, spad, slot_of_pair, counts = group_pairs_by_device(
+            left, right, sup_left, device_of_pair, d, self.buffers.floor)
         self.device_pair_counts.append(counts)
-        qmax = bucket_size(int(counts.max()), self.buffers.floor)
-        lpad = np.zeros((d, qmax), np.int32)
-        rpad = np.zeros((d, qmax), np.int32)
-        spad = np.zeros((d, qmax), np.int32)
-        slot_of_pair = np.empty(q, np.int64)
-        off = 0
-        for dev in range(d):
-            c = int(counts[dev])
-            idx = order[off: off + c]
-            lpad[dev, :c] = left[idx]
-            rpad[dev, :c] = right[idx]
-            spad[dev, :c] = sup_left[idx]
-            slot_of_pair[idx] = dev * qmax + np.arange(c)
-            off += c
         self.n_padded += d * qmax - q
         out, sup = self._sharded[mode](
             bitmaps,
@@ -456,11 +512,99 @@ class ShardedEngine(Engine):
 
 
 # ---------------------------------------------------------------------------
+# word-axis frontier handling, shared by tidsharded + grid
+# ---------------------------------------------------------------------------
+
+class _WordShardedFrontierMixin:
+    """The word-axis (tid) half of a mesh-mapped backend: carry the frontier
+    as ``P(None, data_axis)`` — rows replicated over every other mesh axis,
+    the packed word axis split — and keep it that way across levels.
+
+    Owns exactly three responsibilities (the axis-ownership contract in the
+    module docstring): ``_ensure_sharded`` commits/pads a frontier to the
+    word sharding, ``_take`` keeps survivor row gathers under that
+    constraint so next-level frontiers are *born* word-sharded, and
+    ``prepare_frontier`` exposes the placement to drivers that expand one
+    frontier many times (the chunked level-2 path).
+    """
+
+    def _init_word_axis(self, mesh: jax.sharding.Mesh, data_axis: str) -> None:
+        self.mesh = mesh
+        self.data_axis = data_axis
+        self.n_shards = int(mesh.shape[data_axis])
+        self._spec = word_shard_spec(data_axis)
+        self._sharding = NamedSharding(mesh, self._spec)
+        self._take_rows_sharded = jax.jit(
+            lambda arr, idx: jax.lax.with_sharding_constraint(
+                jnp.take(arr, idx, axis=0), self._sharding))
+
+    def _ensure_sharded(self, bitmaps: jax.Array) -> jax.Array:
+        """Commit the frontier to ``P(None, data_axis)``, zero-padding the
+        word axis to a shard multiple.  Frontiers this engine produced are
+        already placed (compaction keeps the constraint), so steady-state
+        levels are a no-op here."""
+        if bitmaps.shape[1] % self.n_shards == 0:
+            sh = getattr(bitmaps, "sharding", None)
+            if (isinstance(sh, NamedSharding) and sh.mesh == self.mesh
+                    and sh.spec == self._spec):
+                return bitmaps
+        return shard_words(bitmaps, self.mesh, self.data_axis)
+
+    def _take(self, block: jax.Array, idx: jax.Array) -> jax.Array:
+        # survivor gather under the word-sharding constraint: rows move (for
+        # the grid backend, across the class axis only), the word slices stay
+        # on the shard that owns them
+        return self._take_rows_sharded(block, idx)
+
+    def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
+        return self._ensure_sharded(bitmaps)
+
+    def _build_partial_kernels(self, inner: str, interpret: Optional[bool],
+                               pair_spec: P, block_spec: P) -> Dict[int, Callable]:
+        """Per-mode ``jit(shard_map)`` executors over the partial fused
+        kernel: shard-local intersect + popcount, one psum over the word
+        (data) axis only — class shards, if any, own disjoint pair blocks
+        whose counts must never mix — then support conversion and the
+        min-support mask on the reduced value.  The pair/block specs are
+        the only thing the word-sharded backends differ by: ``P()`` /
+        ``P(None, data)`` for ``tidsharded`` (pairs replicated),
+        ``P(class)`` / ``P(class, data)`` for ``grid`` (pairs split)."""
+        if inner not in ("jnp", "pallas"):
+            raise ValueError(f"unknown inner executor {inner!r}")
+        data_axis = self.data_axis
+
+        def _local(bms, l, r, s, msup, _mode):
+            if inner == "pallas":
+                inter, pop = fused_intersect_partial(bms, l, r, mode=_mode,
+                                                     interpret=interpret)
+            else:
+                inter, pop = fused_intersect_partial_ref(bms, l, r, mode=_mode)
+            total = jax.lax.psum(pop, data_axis)
+            sup = total if _mode == MODE_TIDSET else s - total
+            mask = (sup >= msup).astype(jnp.int32)
+            return inter, sup, mask
+
+        # pallas_call has no shard_map replication rule -> unchecked variant
+        smap = shard_map_unchecked if inner == "pallas" else shard_map
+        return {
+            mode: jax.jit(
+                smap(
+                    lambda bms, l, r, s, m, _mode=mode: _local(bms, l, r, s, m, _mode),
+                    mesh=self.mesh,
+                    in_specs=(self._spec, pair_spec, pair_spec, pair_spec, P()),
+                    out_specs=(block_spec, pair_spec, pair_spec),
+                )
+            )
+            for mode in (MODE_TIDSET, MODE_TID_TO_DIFF, MODE_DIFFSET)
+        }
+
+
+# ---------------------------------------------------------------------------
 # tid-sharded backend (frontier word axis split across the mesh)
 # ---------------------------------------------------------------------------
 
 @register_backend("tidsharded")
-class TidShardedEngine(Engine):
+class TidShardedEngine(_WordShardedFrontierMixin, Engine):
     """Word-sharded executor: the frontier bitmap is carried as
     ``P(None, axis)`` — rows replicated, the packed word (tid) axis split
     across the mesh — so each device stores 1/n_shards of every tidset.
@@ -482,65 +626,14 @@ class TidShardedEngine(Engine):
                  axis: str = "data", inner: str = "pallas",
                  interpret: Optional[bool] = None):
         super().__init__(bucket_min)
-        self.mesh = mesh
-        self.axis = axis
         self.inner = inner
-        self.n_shards = int(mesh.shape[axis])
+        self._init_word_axis(mesh, axis)
         # pairs are never distributed in this mode: partition->device routing
         # (device_of_pair) is meaningless and ignored, so advertise a single
         # pair device to the drivers
         self.n_devices = 1
-        if inner not in ("jnp", "pallas"):
-            raise ValueError(f"unknown inner executor {inner!r}")
-        self._spec = word_shard_spec(axis)
-        self._sharding = NamedSharding(mesh, self._spec)
-
-        def _local(bms, l, r, s, msup, _mode):
-            if inner == "pallas":
-                inter, pop = fused_intersect_partial(bms, l, r, mode=_mode,
-                                                     interpret=interpret)
-            else:
-                inter, pop = fused_intersect_partial_ref(bms, l, r, mode=_mode)
-            total = jax.lax.psum(pop, axis)
-            sup = total if _mode == MODE_TIDSET else s - total
-            mask = (sup >= msup).astype(jnp.int32)
-            return inter, sup, mask
-
-        # pallas_call has no shard_map replication rule -> unchecked variant
-        smap = shard_map_unchecked if inner == "pallas" else shard_map
-        self._sharded = {
-            mode: jax.jit(
-                smap(
-                    lambda bms, l, r, s, m, _mode=mode: _local(bms, l, r, s, m, _mode),
-                    mesh=mesh,
-                    in_specs=(self._spec, P(), P(), P(), P()),
-                    out_specs=(self._spec, P(), P()),
-                )
-            )
-            for mode in (MODE_TIDSET, MODE_TID_TO_DIFF, MODE_DIFFSET)
-        }
-        self._take_rows_sharded = jax.jit(
-            lambda arr, idx: jax.lax.with_sharding_constraint(
-                jnp.take(arr, idx, axis=0), self._sharding))
-
-    def _ensure_sharded(self, bitmaps: jax.Array) -> jax.Array:
-        """Commit the frontier to ``P(None, axis)``, zero-padding the word
-        axis to a shard multiple.  Frontiers this engine produced are already
-        placed (compaction keeps the constraint), so steady-state levels are
-        a no-op here."""
-        if bitmaps.shape[1] % self.n_shards == 0:
-            sh = getattr(bitmaps, "sharding", None)
-            if (isinstance(sh, NamedSharding) and sh.mesh == self.mesh
-                    and sh.spec == self._spec):
-                return bitmaps
-        return shard_words(bitmaps, self.mesh, self.axis)
-
-    def _take(self, block: jax.Array, idx: jax.Array) -> jax.Array:
-        # shard-local survivor gather: rows move, the word sharding stays
-        return self._take_rows_sharded(block, idx)
-
-    def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
-        return self._ensure_sharded(bitmaps)
+        self._sharded = self._build_partial_kernels(inner, interpret,
+                                                    P(), self._spec)
 
     def stats(self, since=None) -> dict:
         out = super().stats(since=since)
@@ -565,3 +658,91 @@ class TidShardedEngine(Engine):
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
                            bitmaps=self._compact(inter, sel))
+
+
+# ---------------------------------------------------------------------------
+# grid-sharded backend (pairs x words on a 2D mesh)
+# ---------------------------------------------------------------------------
+
+@register_backend("grid")
+class GridShardedEngine(_WordShardedFrontierMixin, Engine):
+    """Grid-sharded executor on a 2D ``("class", "data")`` mesh: the pair
+    list is split over the **class** axis (grouped by partitioned
+    equivalence class, exactly as in :class:`ShardedEngine`) while the
+    frontier's packed word (tid) axis is split over the **data** axis
+    (exactly as in :class:`TidShardedEngine`).  The frontier is carried as
+    ``P(None, "data")`` — replicated over ``"class"``, word-sharded over
+    ``"data"`` — so each of the ``n_class * n_data`` devices executes the
+    partial fused kernel on one (class-shard pairs) x (word-shard words)
+    tile.
+
+    Supports are recovered with one ``psum`` over the **data axis only**:
+    the class shards own disjoint pair blocks, so their counts must never
+    mix — after the reduce, every device in a data row holds the finished
+    supports of its class shard's pairs.  Survivor compaction gathers rows
+    under the ``P(None, "data")`` constraint: word slices never cross the
+    data axis; survivor rows are replicated over the class axis only (the
+    same survivor broadcast the pair-sharded engine performs implicitly),
+    so the next level's frontier is born grid-placed.
+
+    Net effect vs the 1D modes (DESIGN.md §8): per-device pair work drops
+    ~1/n_class (vs ``tidsharded``, which replicates all pairs) AND
+    per-device frontier memory drops ~1/n_data (vs ``sharded``, which
+    replicates the whole frontier) — the two scaling axes the paper treats
+    separately (executor count, database size), composed on one mesh.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 1024,
+                 class_axis: str = "class", data_axis: str = "data",
+                 inner: str = "pallas", interpret: Optional[bool] = None):
+        super().__init__(bucket_min)
+        missing = [a for a in (class_axis, data_axis)
+                   if a not in mesh.axis_names]
+        if missing:
+            raise ValueError(
+                f"grid backend needs a 2D ({class_axis!r}, {data_axis!r}) "
+                f"mesh (launch.mesh.make_grid_mesh); this mesh has axes "
+                f"{tuple(mesh.axis_names)}")
+        self.class_axis = class_axis
+        self.inner = inner
+        self._init_word_axis(mesh, data_axis)
+        self.n_class = int(mesh.shape[class_axis])
+        # drivers route partition->device over the pair (class) axis
+        self.n_devices = self.n_class
+        self._sharded = self._build_partial_kernels(
+            inner, interpret, grid_pair_spec(class_axis),
+            grid_block_spec(class_axis, data_axis))
+
+    def stats(self, since=None) -> dict:
+        out = super().stats(since=since)
+        out["n_class_shards"] = self.n_class
+        out["n_word_shards"] = self.n_shards
+        out["grid"] = [self.n_class, self.n_shards]
+        return out
+
+    def expand(self, bitmaps, left, right, sup_left, *, mode, min_sup,
+               device_of_pair=None):
+        q = int(left.shape[0])
+        if q == 0:
+            return self._empty(bitmaps)
+        self.n_intersections += q
+        d = self.n_class
+        qmax, lpad, rpad, spad, slot_of_pair, counts = group_pairs_by_device(
+            left, right, sup_left, device_of_pair, d, self.buffers.floor)
+        self.device_pair_counts.append(counts)
+        self.n_padded += d * qmax - q
+        bitmaps = self._ensure_sharded(bitmaps)
+        inter, sup, mask_dev = self._sharded[mode](
+            bitmaps,
+            jnp.asarray(lpad.reshape(d * qmax)),
+            jnp.asarray(rpad.reshape(d * qmax)),
+            jnp.asarray(spad.reshape(d * qmax)),
+            jnp.int32(min_sup),
+        )
+        sup_np = np.asarray(sup).reshape(-1)[slot_of_pair]
+        mask = np.asarray(mask_dev).reshape(-1)[slot_of_pair].astype(bool)
+        sel = np.nonzero(mask)[0]
+        surv = self._compact(inter, slot_of_pair[sel].astype(np.int32))
+        return LevelResult(mask=mask,
+                           supports=sup_np[sel].astype(np.int64),
+                           bitmaps=surv)

@@ -29,7 +29,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["set_mesh", "get_mesh", "reset_mesh", "dp_axes", "constrain",
            "param_spec", "batch_spec", "spec_tree", "sharding_tree",
-           "word_shard_spec", "padded_word_count", "shard_words"]
+           "word_shard_spec", "padded_word_count", "shard_words",
+           "grid_pair_spec", "grid_block_spec"]
 
 # axis names that count as gradient-reduction ("data-parallel") axes
 DP_AXIS_NAMES = ("pod", "data")
@@ -131,6 +132,10 @@ def constrain(x, spec: P):
 # so per-device frontier memory is total/n_shards — the axis the paper
 # scales (database size) stops being bounded by one device.  Popcount is
 # additive across word slices, so supports are recovered with one psum.
+# On the 2D ("class", "data") grid mesh (DESIGN.md §8) the same
+# P(None, "data") spec replicates the frontier over the class axis for free
+# — the spec never names "class" — while the pair/block specs below give the
+# grid engine its class-axis half.
 
 
 def word_shard_spec(axis: str = "data") -> P:
@@ -144,6 +149,20 @@ def padded_word_count(n_words: int, n_shards: int) -> int:
     words carry no set bits, so supports are unchanged)."""
     n_shards = max(int(n_shards), 1)
     return max(int(n_words), 0) + (-int(n_words)) % n_shards
+
+
+def grid_pair_spec(class_axis: str = "class") -> P:
+    """PartitionSpec for a flattened ``(n_class * qmax,)`` padded pair block
+    on the 2D grid mesh (DESIGN.md §8): split over the class axis, replicated
+    over every other axis (each word shard sees its class shard's pairs)."""
+    return P(class_axis)
+
+
+def grid_block_spec(class_axis: str = "class", data_axis: str = "data") -> P:
+    """PartitionSpec for the ``(rows, words)`` intersection block the grid
+    engine produces — rows split by class shard, words by word shard, so no
+    device ever materializes more than a ``1/(n_class * n_data)`` tile."""
+    return P(class_axis, data_axis)
 
 
 def shard_words(arr, mesh, axis: str = "data"):

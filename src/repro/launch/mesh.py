@@ -10,6 +10,7 @@ A deeper `pipeline` axis can be requested for >2-pod topologies.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -17,7 +18,8 @@ import jax
 from ..dist.compat import AxisType, make_mesh
 
 __all__ = ["make_production_mesh", "make_mesh_named", "make_data_mesh",
-           "SINGLE_POD", "MULTI_POD"]
+           "make_grid_mesh", "factor_grid", "parse_grid_arg",
+           "mesh_for_mining", "SINGLE_POD", "MULTI_POD"]
 
 SINGLE_POD = ((16, 16), ("data", "model"))
 MULTI_POD = ((2, 16, 16), ("pod", "data", "model"))
@@ -34,6 +36,88 @@ def make_data_mesh() -> jax.sharding.Mesh:
     CLIs build for the mesh-mapped engine backends (forced host devices
     included: set XLA_FLAGS before launch)."""
     return make_mesh((len(jax.devices()),), ("data",))
+
+
+def factor_grid(n: int) -> Tuple[int, int]:
+    """Most-square ``(n_class, n_data)`` factorization of ``n`` devices with
+    ``n_class <= n_data`` (4 -> (2, 2), 8 -> (2, 4), 6 -> (2, 3), a prime p
+    -> (1, p)).  Ties lean toward the data axis: frontier memory scales with
+    ``n_data`` while pair work rebalances across levels anyway, so the wider
+    axis goes to the harder constraint."""
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    best = (1, n)
+    for c in range(1, math.isqrt(n) + 1):
+        if n % c == 0:
+            best = (c, n // c)
+    return best
+
+
+def make_grid_mesh(n_class: Optional[int] = None,
+                   n_data: Optional[int] = None) -> jax.sharding.Mesh:
+    """2D ``("class", "data")`` mesh for the grid-sharded engine
+    (DESIGN.md §8): pairs split over ``class``, the packed word (tid) axis
+    over ``data``.  With neither dimension given, the visible devices are
+    auto-factorized most-square (:func:`factor_grid`); with one given, the
+    other is the visible count divided by it."""
+    n = len(jax.devices())
+    if n_class is None and n_data is None:
+        n_class, n_data = factor_grid(n)
+    elif n_class is None:
+        n_data = int(n_data)
+        if n_data < 1 or n % n_data:
+            raise ValueError(f"n_data={n_data} does not divide the {n} "
+                             f"visible device(s)")
+        n_class = n // n_data
+    elif n_data is None:
+        n_class = int(n_class)
+        if n_class < 1 or n % n_class:
+            raise ValueError(f"n_class={n_class} does not divide the {n} "
+                             f"visible device(s)")
+        n_data = n // n_class
+    else:
+        n_class, n_data = int(n_class), int(n_data)
+    if n_class < 1 or n_data < 1 or n_class * n_data > n:
+        raise ValueError(f"grid {n_class}x{n_data} needs "
+                         f"{n_class * n_data} device(s); {n} visible")
+    return make_mesh((n_class, n_data), ("class", "data"),
+                     devices=jax.devices()[: n_class * n_data])
+
+
+def parse_grid_arg(spec: Optional[str]) -> Tuple[Optional[int], Optional[int]]:
+    """Parse a CLI ``--grid RxC`` string ("2x2", "4x1") into ``(n_class,
+    n_data)``; ``None`` means auto-factorize (:func:`make_grid_mesh`)."""
+    if spec is None:
+        return None, None
+    parts = spec.lower().replace("×", "x").split("x")
+    if len(parts) != 2:
+        raise ValueError(f"--grid expects RxC (e.g. 2x2), got {spec!r}")
+    try:
+        n_class, n_data = int(parts[0]), int(parts[1])
+    except ValueError:
+        raise ValueError(f"--grid expects integer RxC (e.g. 2x2), got {spec!r}")
+    return n_class, n_data
+
+
+def mesh_for_mining(backend: str, shard: str,
+                    grid: Optional[str] = None) -> Optional[jax.sharding.Mesh]:
+    """The mesh a mining CLI's backend/shard request needs (one source of
+    truth for ``launch.mine`` and ``launch.stream``): a 2D grid mesh for
+    the grid mode (``grid`` is the raw ``--grid RxC`` string, auto-factorized
+    when absent), a 1D ``("data",)`` mesh for the other mesh-mapped modes,
+    ``None`` for the single-device backends."""
+    if backend == "grid" or shard == "grid":
+        return make_grid_mesh(*parse_grid_arg(grid))
+    if grid is not None:
+        # silently dropping --grid would run a different configuration than
+        # the one the user asked to measure
+        raise ValueError(
+            f"--grid {grid} requires the grid mode (--shard grid or "
+            f"--backend grid); got backend={backend!r}, shard={shard!r}")
+    if backend in ("sharded", "tidsharded") or shard == "words":
+        return make_data_mesh()
+    return None
 
 
 def make_mesh_named(name: str) -> jax.sharding.Mesh:

@@ -21,9 +21,15 @@ def main(argv=None):
                     choices=["v1", "v2", "v3", "v4", "v5", "v6"])
     ap.add_argument("--p", type=int, default=10)
     ap.add_argument("--backend", default="pallas",
-                    choices=["jnp", "pallas", "sharded", "tidsharded"])
-    ap.add_argument("--shard", default="pairs", choices=["pairs", "words"],
-                    help="mesh split under a device mesh (see DESIGN.md §7)")
+                    choices=["jnp", "pallas", "sharded", "tidsharded", "grid"])
+    ap.add_argument("--shard", default="pairs",
+                    choices=["pairs", "words", "grid"],
+                    help="mesh split under a device mesh: candidate pairs, "
+                         "the frontier's word axis, or both on a 2D grid "
+                         "(DESIGN.md §7-8)")
+    ap.add_argument("--grid", default=None, metavar="RxC",
+                    help="class x data mesh shape for --shard grid, e.g. 2x2 "
+                         "(default: auto-factorize the visible devices)")
     ap.add_argument("--diffsets", action="store_true",
                     help="dEclat diffsets (variant v6 only)")
     ap.add_argument("--checkpoint-dir", default=None)
@@ -38,16 +44,16 @@ def main(argv=None):
                       backend=args.backend, shard=args.shard,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every_level=args.checkpoint_dir is not None)
-    mesh = None
-    if args.backend in ("sharded", "tidsharded") or args.shard == "words":
-        from .mesh import make_data_mesh
-        mesh = make_data_mesh()
+    from .mesh import mesh_for_mining
+    mesh = mesh_for_mining(args.backend, args.shard, args.grid)
     t0 = time.perf_counter()
     res = mine(txns, spec.n_items, cfg, mesh=mesh)
     dt = time.perf_counter() - t0
+    grid_note = (f" grid={mesh.shape['class']}x{mesh.shape['data']}"
+                 if mesh is not None and "class" in mesh.axis_names else "")
     print(f"[mine] {spec.name} x{args.scale} min_sup={args.min_sup} "
           f"{args.variant}: {res.total} itemsets in {dt:.2f}s "
-          f"levels={res.counts}")
+          f"levels={res.counts}{grid_note}")
     if args.min_conf > 0:
         rules = generate_rules(res.support_map(), args.min_conf)
         print(f"[mine] {len(rules)} rules at conf>={args.min_conf}")

@@ -31,10 +31,15 @@ def main(argv=None):
     ap.add_argument("--drift-every", type=int, default=None,
                     help="re-seed the pattern pool every N batches")
     ap.add_argument("--backend", default="pallas",
-                    choices=["jnp", "pallas", "sharded", "tidsharded"])
-    ap.add_argument("--shard", default="pairs", choices=["pairs", "words"],
+                    choices=["jnp", "pallas", "sharded", "tidsharded", "grid"])
+    ap.add_argument("--shard", default="pairs",
+                    choices=["pairs", "words", "grid"],
                     help="mesh split under a device mesh: candidate pairs "
-                         "(frontier replicated) or the frontier's word axis")
+                         "(frontier replicated), the frontier's word axis, "
+                         "or both on a 2D class x data grid (DESIGN.md §8)")
+    ap.add_argument("--grid", default=None, metavar="RxC",
+                    help="class x data mesh shape for --shard grid, e.g. 2x2 "
+                         "(default: auto-factorize the visible devices)")
     ap.add_argument("--top-k", type=int, default=5)
     ap.add_argument("--min-conf", type=float, default=0.0,
                     help="if >0, also report association rules per slide")
@@ -45,18 +50,22 @@ def main(argv=None):
     cfg = StreamConfig(min_sup=args.min_sup, n_blocks=args.n_blocks,
                        block_txns=args.block_txns, backend=args.backend,
                        shard=args.shard)
-    mesh = None
-    if args.backend in ("sharded", "tidsharded") or args.shard == "words":
-        from .mesh import make_data_mesh
-        mesh = make_data_mesh()
+    from .mesh import mesh_for_mining
+    mesh = mesh_for_mining(args.backend, args.shard, args.grid)
     service = StreamQueryService(
         StreamingMiner(spec.n_items, cfg, mesh=mesh,
                        keep_transactions=False))
-    eff_shard = "words" if args.backend == "tidsharded" else args.shard
+    eff_shard = {"tidsharded": "words", "grid": "grid"}.get(args.backend,
+                                                            args.shard)
+    if mesh is None:
+        mesh_note = ""
+    elif "class" in mesh.axis_names:
+        mesh_note = (f", shard=grid over a {mesh.shape['class']}x"
+                     f"{mesh.shape['data']} class x data mesh")
+    else:
+        mesh_note = f", shard={eff_shard} over {mesh.shape['data']} device(s)"
     print(f"[stream] {spec.name}: window={args.n_blocks}x{args.block_txns} "
-          f"txns, min_sup={args.min_sup}, backend={args.backend}"
-          + (f", shard={eff_shard} over {mesh.shape['data']} device(s)"
-             if mesh is not None else ""))
+          f"txns, min_sup={args.min_sup}, backend={args.backend}{mesh_note}")
 
     for i, batch in enumerate(transaction_stream(
             args.dataset, args.block_txns, args.batches,

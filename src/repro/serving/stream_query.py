@@ -101,16 +101,27 @@ class StreamQueryService:
     def answer_batch(self, queries: Sequence[ItemsetQuery], n_batches: int = 4):
         """Answer a heterogeneous query batch, greedy-LPT packed.
 
-        Returns ``(answers by qid, packing stats)`` — the stats carry the
-        same ``padding_efficiency`` balance metric as the mining partitioner.
+        The packing is executed, not just reported: queries are answered
+        slot-by-slot in the packed assignment (the regression was computing
+        the packing, answering in input order, and returning balance stats
+        for work that never happened).  Returns ``(answers by qid, packing
+        stats)`` — the stats carry the partitioner's ``padding_efficiency``
+        plus ``queries_per_slot``, the per-answer-slot query counts of the
+        assignment that actually ran.
         """
         assign, stats = pack_queries(queries, n_batches, max(len(self._itemsets), 1))
         answers: Dict[int, list] = {}
-        for q in queries:               # assignment is consumed by the stats
-            if q.kind == "topk":
-                answers[q.qid] = self.top_k_itemsets(q.k, q.min_len)
-            elif q.kind == "rules":
-                answers[q.qid] = self.rules(q.min_conf, q.k)
-            else:
-                raise ValueError(f"unknown query kind {q.kind!r}")
+        queries_per_slot: List[int] = []
+        for slot in range(int(n_batches)):
+            members = np.nonzero(assign == slot)[0]
+            queries_per_slot.append(int(members.size))
+            for qi in members:
+                q = queries[int(qi)]
+                if q.kind == "topk":
+                    answers[q.qid] = self.top_k_itemsets(q.k, q.min_len)
+                elif q.kind == "rules":
+                    answers[q.qid] = self.rules(q.min_conf, q.k)
+                else:
+                    raise ValueError(f"unknown query kind {q.kind!r}")
+        stats["queries_per_slot"] = queries_per_slot
         return answers, stats

@@ -55,11 +55,11 @@ class StreamConfig:
     min_sup: float                 # float in (0,1] = fraction of live window txns; int >= 1 = count
     n_blocks: int = 16             # window capacity in micro-batch blocks
     block_txns: int = 1024         # txn columns per block (multiple of 32)
-    backend: str = "pallas"        # core.engine backend: jnp | pallas | sharded | tidsharded
-    shard: str = "pairs"           # mesh split: "pairs" | "words" (word-sharded ring, DESIGN.md §7)
+    backend: str = "pallas"        # core.engine backend: jnp | pallas | sharded | tidsharded | grid
+    shard: str = "pairs"           # mesh split: "pairs" | "words" (word-sharded ring, DESIGN.md §7) | "grid" (2D pairs x words mesh, DESIGN.md §8)
     partitioner: str = "greedy"    # equivalence-class placement (paper §4.5)
     p: int = 10                    # partitions for the class table
-    max_k: Optional[int] = None
+    max_k: Optional[int] = None    # deepest itemset length to mine (>= 1); None = unbounded
     bucket_min: int = 1024         # engine pair-buffer ladder floor
 
     def resolve_min_sup(self, n_txn: int) -> int:
@@ -105,9 +105,11 @@ class StreamingMiner:
                  keep_transactions: bool = True):
         self.n_items = int(n_items)
         self.config = config
-        # word-sharded mode carries the ring itself at P(None, "data") so
-        # the window bitmap never fully lands on any one device
-        words_mode = (config.shard == "words" or config.backend == "tidsharded")
+        # word-sharded and grid modes carry the ring itself at P(None, "data")
+        # so the window bitmap never fully lands on any one device (on the 2D
+        # grid mesh the spec replicates it over the class axis for free)
+        words_mode = (config.shard in ("words", "grid")
+                      or config.backend in ("tidsharded", "grid"))
         self.ring = WindowRing(n_items, config.n_blocks, config.block_txns,
                                keep_transactions=keep_transactions,
                                mesh=mesh if words_mode else None)
@@ -153,6 +155,9 @@ class StreamingMiner:
         batch ``mine()``).
         """
         cfg = self.config
+        if cfg.max_k is not None and cfg.max_k < 1:
+            raise ValueError(f"max_k must be >= 1 (or None for unbounded), "
+                             f"got {cfg.max_k}")
         t_start = time.perf_counter()
         engine_snap = self.engine.snapshot()
         n_txn = self.ring.n_txn
@@ -200,7 +205,10 @@ class StreamingMiner:
         store.add_level(LevelRecord(k=1, parent=np.full(n1, -1, np.int64),
                                     item_rank=np.arange(n1, dtype=np.int64),
                                     support=sup1, partition=lvl1_partition))
-        if n1 < 2:
+        # max_k bounds every level, including 2 — bit-exact with the batch
+        # driver (the regression was expanding level 2 regardless of max_k)
+        max_k = n1 if cfg.max_k is None else cfg.max_k
+        if n1 < 2 or max_k < 2:
             stats.update(self.engine.stats(since=engine_snap))
             stats["total_s"] = time.perf_counter() - t_start
             return WindowResult(store=store, n_txn=n_txn, stats=stats)
@@ -246,7 +254,7 @@ class StreamingMiner:
                       class_id=iu.copy(), item_rank=ju.copy(),
                       partition=partition, support=sup2,
                       abs_min_sup=abs_min_sup, mode=eng.MODE_TIDSET,
-                      max_k=cfg.max_k or n1, part_to_dev=part_to_dev)
+                      max_k=max_k, part_to_dev=part_to_dev)
         stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
         # engine counters are lifetime-cumulative; report this slide's delta
         stats.update(self.engine.stats(since=engine_snap))

@@ -65,7 +65,10 @@ class WindowRing:
     stays resident — block writes update only the word span of the evicted
     block, which lands on the shard(s) owning those words.  The word axis is
     zero-padded to a shard multiple (pad words are popcount-neutral); the
-    host mirror stays at the logical ``n_words``.
+    host mirror stays at the logical ``n_words``.  On a 2D grid mesh
+    (DESIGN.md §8) the same ``P(None, "data")`` placement additionally
+    replicates the ring over the class axis — exactly how the grid engine
+    carries its frontier, so the ring feeds it with no re-placement.
     """
 
     def __init__(self, n_items: int, n_blocks: int, block_txns: int,

@@ -41,11 +41,81 @@ def test_fractional_min_sup():
     assert res.stats["abs_min_sup"] == int(np.ceil(0.3 * len(DB)))
 
 
-def test_max_k_truncates():
-    res = mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3, max_k=2))
-    full = ORACLES[20]
-    expect = {k: v for k, v in full.items() if len(k) <= 2}
+def _mesh_for(backend):
+    from repro.dist.compat import make_mesh
+    import jax
+    if backend in ("sharded", "tidsharded"):
+        return make_mesh((4,), ("data",))
+    if backend == "grid":
+        return make_mesh((2, 2), ("class", "data"), devices=jax.devices()[:4])
+    return None
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded",
+                                     "tidsharded", "grid"])
+@pytest.mark.parametrize("max_k", [1, 2, 3, None])
+def test_max_k_boundaries_all_backends(backend, max_k):
+    """Regression: max_k < 3 was ignored — level 2 was always expanded and
+    recorded (max_k=1 returned two levels).  Every backend must return
+    exactly the oracle truncated at max_k."""
+    shard = {"tidsharded": "words", "grid": "grid"}.get(backend, "pairs")
+    res = mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3,
+                                   backend=backend, shard=shard,
+                                   max_k=max_k, bucket_min=32),
+               mesh=_mesh_for(backend))
+    expect = {k: v for k, v in ORACLES[20].items()
+              if max_k is None or len(k) <= max_k}
     assert res.support_map() == expect
+    if max_k is not None:
+        assert len(res.counts) <= max_k
+
+
+def test_max_k_one_keeps_stats_shape():
+    """The max_k<2 early return must carry the same stats keys as a full
+    run (balance + engine counters), just with no device work recorded."""
+    full = mine(DB, 10, EclatConfig(min_sup=20, variant="v6", p=3))
+    k1 = mine(DB, 10, EclatConfig(min_sup=20, variant="v6", p=3, max_k=1))
+    assert k1.stats["backend"] == full.stats["backend"]
+    assert (k1.stats["partition_balance"]["estimated_loads"]
+            == full.stats["partition_balance"]["estimated_loads"])
+    assert k1.stats["n_intersections"] == 0
+
+
+def test_max_k_validation():
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="max_k"):
+            mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3,
+                                     max_k=bad))
+
+
+def test_max_k_one_no_trimatrix_path():
+    """max_k=1 must also skip the chunked no-tri level 2."""
+    res = mine(DB, 10, EclatConfig(min_sup=20, variant="v5", p=3,
+                                   tri_matrix=False, max_k=1))
+    assert res.support_map() == {k: v for k, v in ORACLES[20].items()
+                                 if len(k) == 1}
+    assert len(res.counts) == 1
+
+
+# ---------------------------------------------------------------------------
+# the tri-matrix level-2 cross-check is a real exception (survives -O)
+# ---------------------------------------------------------------------------
+
+def test_trimatrix_corruption_raises(monkeypatch):
+    """Regression: the batch tri path assumed 'the mask is all-true' without
+    checking — a corrupt co-occurrence pass would misalign iu/ju (all
+    pre-filtered pairs) against res.supports (survivors only) silently."""
+    from repro.core import eclat as eclat_mod
+    real = eclat_mod.cooccurrence_counts
+
+    def corrupt(bitmaps, *a, **kw):
+        # inflate every pair count past the threshold: genuinely infrequent
+        # pairs now pass the prefilter and the engine refutes them
+        return real(bitmaps, *a, **kw) + 60
+
+    monkeypatch.setattr(eclat_mod, "cooccurrence_counts", corrupt)
+    with pytest.raises(RuntimeError, match="tri-matrix pass is corrupt"):
+        mine(DB, 10, EclatConfig(min_sup=60, variant="v4", p=3))
 
 
 def test_apriori_matches_oracle():

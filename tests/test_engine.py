@@ -24,6 +24,12 @@ def _mesh4():
     return make_mesh((4,), ("data",))
 
 
+def _grid22():
+    import jax
+    from repro.dist.compat import make_mesh
+    return make_mesh((2, 2), ("class", "data"), devices=jax.devices()[:4])
+
+
 def _engine(backend):
     if backend == "jnp":
         return eng.make_engine("jnp", bucket_min=8)
@@ -41,6 +47,12 @@ def _engine(backend):
                                inner="jnp")
     if backend == "tidsharded-pallas-kernel":
         return eng.make_engine("tidsharded", mesh=_mesh4(), bucket_min=8,
+                               inner="pallas", interpret=True)
+    if backend == "grid-jnp":
+        return eng.make_engine("grid", mesh=_grid22(), bucket_min=8,
+                               inner="jnp")
+    if backend == "grid-pallas-kernel":
+        return eng.make_engine("grid", mesh=_grid22(), bucket_min=8,
                                inner="pallas", interpret=True)
     raise AssertionError(backend)
 
@@ -91,7 +103,7 @@ SHAPES_INTERP = [(1, 1, 0), (1, 1, 1), (5, 3, 13), (9, 5, 7)]
 
 
 @pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded-jnp",
-                                     "tidsharded-jnp"])
+                                     "tidsharded-jnp", "grid-jnp"])
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("p,w,q", SHAPES_FAST)
 def test_backend_parity(backend, mode, p, w, q):
@@ -100,12 +112,14 @@ def test_backend_parity(backend, mode, p, w, q):
     ref_bm, ref_sup, ref_mask = _oracle(bitmaps, left, right, sup_left, mode, min_sup)
     e = _engine(backend)
     res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
-                   mode=mode, min_sup=min_sup, device_of_pair=dev)
+                   mode=mode, min_sup=min_sup,
+                   device_of_pair=dev % max(e.n_devices, 1))
     _check_level(res, ref_bm, ref_sup, ref_mask, w)
 
 
 @pytest.mark.parametrize("backend", ["pallas-kernel", "sharded-pallas-kernel",
-                                     "tidsharded-pallas-kernel"])
+                                     "tidsharded-pallas-kernel",
+                                     "grid-pallas-kernel"])
 @pytest.mark.parametrize("mode", MODES)
 @pytest.mark.parametrize("p,w,q", SHAPES_INTERP)
 def test_pallas_kernel_parity(backend, mode, p, w, q):
@@ -115,7 +129,8 @@ def test_pallas_kernel_parity(backend, mode, p, w, q):
     ref_bm, ref_sup, ref_mask = _oracle(bitmaps, left, right, sup_left, mode, min_sup)
     e = _engine(backend)
     res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
-                   mode=mode, min_sup=min_sup, device_of_pair=dev)
+                   mode=mode, min_sup=min_sup,
+                   device_of_pair=dev % max(e.n_devices, 1))
     _check_level(res, ref_bm, ref_sup, ref_mask, w)
 
 
@@ -211,13 +226,12 @@ def test_mine_legacy_batched_alias():
 
 def test_registry_surface():
     assert set(eng.available_backends()) >= {"jnp", "pallas", "sharded",
-                                             "tidsharded"}
+                                             "tidsharded", "grid"}
     with pytest.raises(ValueError, match="unknown engine backend"):
         eng.make_engine("nope")
-    with pytest.raises(ValueError, match="requires a mesh"):
-        eng.make_engine("sharded")
-    with pytest.raises(ValueError, match="requires a mesh"):
-        eng.make_engine("tidsharded")
+    for meshful in ("sharded", "tidsharded", "grid"):
+        with pytest.raises(ValueError, match="requires a mesh"):
+            eng.make_engine(meshful)
 
 
 def test_pair_buffers_ladder_reuse():

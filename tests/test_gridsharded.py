@@ -1,0 +1,323 @@
+"""Grid-sharded (pairs x words) execution on a 2D ("class", "data") mesh:
+routing, placement, per-axis work/memory scaling, and bit-exact parity with
+the single-device backends (DESIGN.md §8).
+
+The contract under test: candidate pairs are split over the class axis (as
+in the pair-sharded engine) while the frontier's packed word axis is split
+over the data axis (as in the tid-sharded engine); the frontier is carried
+``P(None, "data")`` — replicated over class, word-sharded over data —
+supports are recovered with one psum over the data axis only, survivor
+compaction keeps the word constraint, and none of it is visible in the
+mined itemsets for batch v1–v6 or streaming windows, on the 2x2 grid and on
+both degenerate grids (4x1 ~ pair-sharding, 1x4 ~ word-sharding).
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import EclatConfig, bruteforce_fim, mine
+from repro.core import engine as eng
+from repro.core.bitmap import popcount_np
+from repro.dist.compat import make_mesh
+from repro.streaming import StreamConfig, StreamingMiner
+
+GRIDS = [(2, 2), (4, 1), (1, 4)]
+
+
+def _grid(n_class, n_data):
+    return make_mesh((n_class, n_data), ("class", "data"),
+                     devices=jax.devices()[: n_class * n_data])
+
+
+def make_db(seed=7, n_items=10, n_txn=150):
+    rng = np.random.default_rng(seed)
+    txns = []
+    for _ in range(n_txn):
+        t = set(rng.choice(n_items, size=rng.integers(3, 7), replace=False).tolist())
+        if rng.random() < 0.5:
+            t |= {0, 1, 2, 3}
+        txns.append(sorted(t))
+    return txns
+
+
+DB = make_db()
+ORACLE = bruteforce_fim(DB, min_sup=25)
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def test_resolve_engine_routes_grid_mode():
+    mesh = _grid(2, 2)
+    e = eng.resolve_engine("pallas", mesh, shard="grid")
+    assert e.name == "grid" and e.inner == "pallas"
+    e = eng.resolve_engine("jnp", mesh, shard="grid")
+    assert e.name == "grid" and e.inner == "jnp"
+    assert eng.resolve_engine("grid", mesh).name == "grid"
+    # graceful degrade without a mesh, like the other mesh-mapped backends
+    assert eng.resolve_engine("grid", None).name == "pallas"
+    with pytest.raises(ValueError, match="shard mode"):
+        eng.resolve_engine("pallas", mesh, shard="gird")
+    # grid + default shard still routes to grid (backend implies the mode)
+    assert eng.resolve_engine("grid", mesh, shard="pairs").name == "grid"
+
+
+def test_resolve_engine_rejects_contradictory_backend_shard():
+    """Regression: backend='tidsharded' silently overrode an explicit
+    shard='grid' request — the CLI then logged a grid run that executed as
+    word-sharding.  A named mesh backend with a *different* non-default
+    shard is now rejected."""
+    mesh = _grid(2, 2)
+    for backend, shard in (("tidsharded", "grid"), ("grid", "words"),
+                           ("sharded", "grid"), ("sharded", "words")):
+        with pytest.raises(ValueError, match="implies shard"):
+            eng.resolve_engine(backend, mesh, shard=shard)
+
+
+def test_grid_requires_a_2d_class_data_mesh():
+    with pytest.raises(ValueError, match="requires a mesh"):
+        eng.make_engine("grid")
+    with pytest.raises(ValueError, match="mesh has axes"):
+        eng.make_engine("grid", mesh=make_mesh((4,), ("data",)))
+
+
+def test_mine_config_shard_grid_routes_to_grid():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v4", p=4,
+                                   shard="grid"), mesh=_grid(2, 2))
+    assert res.stats["backend"] == "grid"
+    assert res.stats["grid"] == [2, 2]
+    assert res.stats["n_class_shards"] == 2
+    assert res.stats["n_word_shards"] == 2
+    assert res.support_map() == ORACLE
+
+
+# ---------------------------------------------------------------------------
+# batch parity matrix: v1–v6 x inner executor x 2x2 / 4x1 / 1x4 grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("variant", ["v1", "v2", "v3", "v4", "v5", "v6"])
+@pytest.mark.parametrize("inner", ["jnp", "pallas"])
+@pytest.mark.parametrize("grid", GRIDS, ids=lambda g: f"{g[0]}x{g[1]}")
+def test_mine_grid_matches_oracle(variant, inner, grid):
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant=variant, p=3,
+                                   use_diffsets=(variant == "v6"),
+                                   backend=inner, shard="grid",
+                                   bucket_min=32), mesh=_grid(*grid))
+    assert res.stats["backend"] == "grid"
+    assert res.stats["grid"] == list(grid)
+    assert res.support_map() == ORACLE
+
+
+def test_mine_grid_no_trimatrix():
+    res = mine(DB, 10, EclatConfig(min_sup=25, variant="v5", p=3,
+                                   tri_matrix=False, shard="grid",
+                                   bucket_min=32), mesh=_grid(2, 2))
+    assert res.support_map() == ORACLE
+
+
+# ---------------------------------------------------------------------------
+# placement: frontier P(None, "data"), pairs split over the class axis
+# ---------------------------------------------------------------------------
+
+def _case(p=32, w=8, q=24, n_class=2, seed=0):
+    rng = np.random.default_rng(seed)
+    bitmaps = rng.integers(0, 2**32, (p, w), dtype=np.uint32)
+    left = rng.integers(0, p, q).astype(np.int32)
+    right = rng.integers(0, p, q).astype(np.int32)
+    sup_left = popcount_np(bitmaps[left]).sum(-1).astype(np.int32)
+    dev = rng.integers(0, n_class, q).astype(np.int64)
+    return bitmaps, left, right, sup_left, dev
+
+
+def test_frontier_word_sharded_and_class_replicated():
+    bitmaps, left, right, sup_left, dev = _case()
+    mesh = _grid(2, 2)
+    e = eng.make_engine("grid", mesh=mesh, bucket_min=8, inner="jnp")
+    res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                   mode=eng.MODE_TIDSET, min_sup=1, device_of_pair=dev)
+    sh = res.bitmaps.sharding
+    assert isinstance(sh, NamedSharding)
+    assert sh.spec == P(None, "data")
+    # each device holds all survivor rows but only 1/n_data of the words —
+    # replicated over the 2-wide class axis, split over the 2-wide data axis
+    assert res.bitmaps.addressable_shards[0].data.shape[0] == res.bitmaps.shape[0]
+    assert res.bitmaps.addressable_shards[0].data.nbytes * 2 == res.bitmaps.nbytes
+    # feeding the frontier back in (the bottom-up loop) keeps it placed
+    res2 = e.expand(res.bitmaps, np.zeros(4, np.int32), np.zeros(4, np.int32),
+                    res.supports[:1].repeat(4).astype(np.int32),
+                    mode=eng.MODE_TIDSET, min_sup=1,
+                    device_of_pair=np.array([0, 1, 0, 1]))
+    assert res2.bitmaps.sharding.spec == P(None, "data")
+
+
+def test_pairs_split_over_class_words_over_data():
+    """The point of the mode: per-device pair work ~ 1/n_class (vs the
+    word-sharded engine, which replicates all pairs) AND per-device frontier
+    bytes ~ 1/n_data (vs the pair-sharded engine, which replicates the
+    frontier) — at identical supports."""
+    bitmaps, left, right, sup_left, dev = _case(p=64, w=16, q=40, n_class=2,
+                                                seed=1)
+    sups = {}
+    # grid 2x2
+    e = eng.make_engine("grid", mesh=_grid(2, 2), bucket_min=8, inner="jnp")
+    res = e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                   mode=eng.MODE_TIDSET, min_sup=1, device_of_pair=dev)
+    sups["grid"] = res.supports.tolist()
+    counts = e.device_pair_counts[-1]
+    assert counts.shape == (2,) and counts.sum() == 40   # pairs split 2 ways
+    grid_frontier_per_dev = res.bitmaps.addressable_shards[0].data.nbytes
+    assert grid_frontier_per_dev * 2 == res.bitmaps.nbytes
+    # word-sharded engine on the same 4 devices: every device sees all pairs
+    ew = eng.make_engine("tidsharded", mesh=make_mesh((4,), ("data",)),
+                         bucket_min=8, inner="jnp")
+    resw = ew.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                     mode=eng.MODE_TIDSET, min_sup=1)
+    sups["words"] = resw.supports.tolist()
+    assert not ew.device_pair_counts                     # no pair distribution
+    # pair-sharded engine: pairs split 4 ways but the frontier replicated
+    ep = eng.make_engine("sharded", mesh=make_mesh((4,), ("data",)),
+                         bucket_min=8, inner="jnp")
+    resp = ep.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                     mode=eng.MODE_TIDSET, min_sup=1,
+                     device_of_pair=dev % 4)
+    sups["pairs"] = resp.supports.tolist()
+    assert sups["grid"] == sups["words"] == sups["pairs"]
+
+
+def test_grid_rejects_out_of_range_class_ids():
+    bitmaps, left, right, sup_left, _ = _case(q=9)
+    e = eng.make_engine("grid", mesh=_grid(2, 2), bucket_min=8, inner="jnp")
+    for bad in (np.full(9, 2, np.int64),                  # == n_class
+                np.array([0, -1, 0, 0, 0, 0, 0, 0, 0])):  # negative
+        with pytest.raises(ValueError, match="device_of_pair"):
+            e.expand(jnp.asarray(bitmaps), left, right, sup_left,
+                     mode=eng.MODE_TIDSET, min_sup=1, device_of_pair=bad)
+
+
+def test_empty_frontier_and_single_pair():
+    mesh = _grid(2, 2)
+    e = eng.make_engine("grid", mesh=mesh, bucket_min=8, inner="jnp")
+    bm = jnp.asarray(np.random.default_rng(2).integers(
+        0, 2**32, (1, 1), dtype=np.uint32))
+    res = e.expand(bm, np.zeros(0, np.int32), np.zeros(0, np.int32),
+                   np.zeros(0, np.int32), mode=eng.MODE_TIDSET, min_sup=1)
+    assert res.mask.shape == (0,) and res.supports.shape == (0,)
+    res = e.expand(bm, np.zeros(1, np.int32), np.zeros(1, np.int32),
+                   np.zeros(1, np.int32), mode=eng.MODE_TIDSET, min_sup=1)
+    assert res.mask.shape == (1,)
+
+
+def test_grid_mesh_construction_helpers():
+    from repro.launch.mesh import factor_grid, make_grid_mesh, parse_grid_arg
+    assert factor_grid(4) == (2, 2)
+    assert factor_grid(8) == (2, 4)
+    assert factor_grid(6) == (2, 3)
+    assert factor_grid(7) == (1, 7)
+    with pytest.raises(ValueError):
+        factor_grid(0)
+    mesh = make_grid_mesh()                    # auto: 4 forced host devices
+    assert tuple(mesh.axis_names) == ("class", "data")
+    assert (mesh.shape["class"], mesh.shape["data"]) == (2, 2)
+    mesh = make_grid_mesh(4, 1)
+    assert (mesh.shape["class"], mesh.shape["data"]) == (4, 1)
+    mesh = make_grid_mesh(n_data=4)
+    assert (mesh.shape["class"], mesh.shape["data"]) == (1, 4)
+    with pytest.raises(ValueError, match="visible"):
+        make_grid_mesh(8, 8)
+    with pytest.raises(ValueError, match="does not divide"):
+        make_grid_mesh(n_class=3)
+    assert parse_grid_arg(None) == (None, None)
+    assert parse_grid_arg("2x2") == (2, 2)
+    assert parse_grid_arg("4X1") == (4, 1)
+    with pytest.raises(ValueError, match="RxC"):
+        parse_grid_arg("2x2x2")
+    with pytest.raises(ValueError, match="RxC"):
+        parse_grid_arg("twoxtwo")
+
+
+def test_mesh_for_mining_routes_and_rejects_stray_grid_arg():
+    from repro.launch.mesh import mesh_for_mining
+    assert mesh_for_mining("pallas", "pairs") is None
+    assert mesh_for_mining("jnp", "pairs") is None
+    assert tuple(mesh_for_mining("pallas", "words").axis_names) == ("data",)
+    assert tuple(mesh_for_mining("sharded", "pairs").axis_names) == ("data",)
+    mesh = mesh_for_mining("pallas", "grid", "2x2")
+    assert tuple(mesh.axis_names) == ("class", "data")
+    assert tuple(mesh_for_mining("grid", "pairs").axis_names) == ("class",
+                                                                  "data")
+    # a --grid argument outside the grid mode would otherwise be silently
+    # dropped — the run would measure a different configuration
+    with pytest.raises(ValueError, match="requires the grid mode"):
+        mesh_for_mining("pallas", "pairs", "2x2")
+    with pytest.raises(ValueError, match="requires the grid mode"):
+        mesh_for_mining("tidsharded", "pairs", "2x2")
+
+
+# ---------------------------------------------------------------------------
+# streaming windows: grid-placed ring + grid engine, bit-exact
+# ---------------------------------------------------------------------------
+
+def _batches(n_batches, batch_txns, seed=0, n_items=12):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        batch = []
+        for _ in range(batch_txns):
+            t = set(rng.choice(n_items, size=rng.integers(3, 7),
+                               replace=False).tolist())
+            if rng.random() < 0.5:
+                t |= {0, 1, 2}
+            batch.append(sorted(t))
+        out.append(batch)
+    return out
+
+
+@pytest.mark.parametrize("route", ["shard_grid", "backend_name"])
+def test_streaming_grid_matches_batch_mine(route):
+    mesh = _grid(2, 2)
+    if route == "shard_grid":
+        cfg = StreamConfig(min_sup=5, n_blocks=3, block_txns=32,
+                           backend="pallas", shard="grid", bucket_min=16)
+    else:
+        cfg = StreamConfig(min_sup=5, n_blocks=3, block_txns=32,
+                           backend="grid", bucket_min=16)
+    miner = StreamingMiner(12, cfg, mesh=mesh)
+    assert miner.engine.name == "grid"
+    # the window ring is carried exactly the way the grid engine wants its
+    # frontier: word-sharded over data, replicated over class
+    assert miner.ring.device.sharding.spec == P(None, "data")
+    for i, batch in enumerate(_batches(6, 28, seed=4)):
+        res = miner.advance(batch)
+        miner.ring.validate()
+        window = miner.window_transactions()
+        batch_res = mine(window, 12, EclatConfig(min_sup=5, variant="v4",
+                                                 p=4, backend="jnp",
+                                                 bucket_min=16))
+        assert res.support_map() == batch_res.support_map(), f"slide {i}"
+
+
+@pytest.mark.parametrize("grid", [(4, 1), (1, 4)],
+                         ids=lambda g: f"{g[0]}x{g[1]}")
+def test_streaming_grid_degenerate_meshes(grid):
+    miner = StreamingMiner(12, StreamConfig(min_sup=5, n_blocks=2,
+                                            block_txns=32, shard="grid",
+                                            bucket_min=16),
+                           mesh=_grid(*grid))
+    for i, batch in enumerate(_batches(4, 24, seed=5)):
+        res = miner.advance(batch)
+        batch_res = mine(miner.window_transactions(), 12,
+                         EclatConfig(min_sup=5, backend="jnp", bucket_min=16))
+        assert res.support_map() == batch_res.support_map(), f"slide {i}"
+
+
+def test_streaming_grid_empty_window():
+    miner = StreamingMiner(12, StreamConfig(min_sup=2, n_blocks=2,
+                                            block_txns=32, shard="grid"),
+                           mesh=_grid(2, 2))
+    res = miner.mine_window()
+    assert res.total == 0 and res.support_map() == {}
+    res = miner.advance([])
+    assert res.total == 0

@@ -154,6 +154,41 @@ def test_class_crossing_bookkeeping_under_drift():
     assert entered > 0 and exited > 0
 
 
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "grid"])
+@pytest.mark.parametrize("max_k", [1, 2, 3, None])
+def test_streaming_max_k_matches_batch(backend, max_k):
+    """Regression: mine_window ignored max_k < 3 — level 2 was always
+    expanded and recorded.  Streaming must stay bit-exact with batch mine()
+    at every max_k boundary."""
+    if backend == "grid":
+        from repro.dist.compat import make_mesh
+        import jax
+        mesh = make_mesh((2, 2), ("class", "data"), devices=jax.devices()[:4])
+        cfg = StreamConfig(min_sup=5, n_blocks=2, block_txns=32,
+                           shard="grid", max_k=max_k, bucket_min=16)
+    else:
+        mesh = None
+        cfg = StreamConfig(min_sup=5, n_blocks=2, block_txns=32,
+                           backend=backend, max_k=max_k, bucket_min=16)
+    miner = StreamingMiner(N_ITEMS, cfg, mesh=mesh)
+    for batch in _batches(3, 28, seed=4):
+        res = miner.advance(batch)
+        batch_res = mine(miner.window_transactions(), N_ITEMS,
+                         EclatConfig(min_sup=5, backend="jnp", max_k=max_k,
+                                     bucket_min=16))
+        assert res.support_map() == batch_res.support_map()
+        if max_k is not None:
+            assert len(res.counts) <= max_k
+
+
+def test_streaming_max_k_validation():
+    miner = StreamingMiner(N_ITEMS, StreamConfig(min_sup=5, n_blocks=2,
+                                                 block_txns=32, max_k=0))
+    miner.push(_batches(1, 20, seed=3)[0])
+    with pytest.raises(ValueError, match="max_k"):
+        miner.mine_window()
+
+
 def test_per_slide_engine_stats_are_deltas():
     """stats['n_intersections'] is this slide's work, not the lifetime total
     of the miner's persistent engine."""
@@ -301,6 +336,27 @@ def test_answer_batch_packs_and_answers_all():
     assert 0 < stats["padding_efficiency"] <= 1.0
     with pytest.raises(ValueError, match="unknown query kind"):
         service.answer_batch([ItemsetQuery(qid=1, kind="nope")], 1)
+
+
+def test_answer_batch_executes_the_packing_it_reports():
+    """Regression: answer_batch computed a greedy-LPT packing, answered in
+    input order, and discarded the assignment — the reported
+    padding_efficiency described work that never happened.  The per-slot
+    counts must now match the assignment pack_queries produced."""
+    from repro.serving import pack_queries
+    service = _service()
+    queries = [ItemsetQuery(qid=i, kind="rules" if i % 3 == 0 else "topk")
+               for i in range(7)]
+    answers, stats = service.answer_batch(queries, n_batches=3)
+    assert set(answers) == set(range(7))
+    per_slot = stats["queries_per_slot"]
+    assert len(per_slot) == 3 and sum(per_slot) == len(queries)
+    # the executed slot loads are exactly the ones the partitioner assigned
+    assign, _ = pack_queries(queries, 3, max(len(service._itemsets), 1))
+    expect = [int((assign == s).sum()) for s in range(3)]
+    assert per_slot == expect
+    # heterogeneous work means the pack is non-trivial (not all one slot)
+    assert max(per_slot) < len(queries)
 
 
 def test_windowresult_rules_passthrough():
