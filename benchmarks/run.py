@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract).
 
+  headline             the paper's headline claim: Apriori vs Eclat v1-v6
+                       across dataset scale and mesh size, checksum-verified
+                       -> BENCH_headline.json
   fim_minsup           Figs 8-14: Eclat variants + Apriori vs min_sup
   fim_scale            Fig 16: dataset-size scaling
   fim_cores            Fig 15: executor-core scaling (subprocess per count)
@@ -33,11 +36,13 @@ from benchmarks.engine_bench import engine_bench
 from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
 from benchmarks.gridscale_bench import gridscale_bench
+from benchmarks.headline_bench import headline_bench
 from benchmarks.micro import kernel_microbench, moe_balance
 from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
 
 TABLES = {
+    "headline": headline_bench,
     "fim_minsup": fim_minsup,
     "fim_scale": fim_scale,
     "fim_cores": fim_cores,
@@ -60,6 +65,7 @@ def main() -> None:
     args = ap.parse_args()
 
     tables = {
+        "headline": functools.partial(headline_bench, smoke=True),
         "engine": functools.partial(engine_bench, smoke=True),
         "streaming": functools.partial(streaming_bench, smoke=True),
         "shardscale": functools.partial(shardscale_bench, smoke=True),

@@ -9,9 +9,9 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.analysis.report import (dryrun_table, fim_table, gridscale_table,
-                                   load_bench, load_reports, perf_log_table,
-                                   roofline_table, shardscale_table,
-                                   streaming_table)
+                                   headline_table, load_bench, load_reports,
+                                   perf_log_table, roofline_table,
+                                   shardscale_table, streaming_table)
 
 HEADER = """# EXPERIMENTS
 
@@ -53,6 +53,13 @@ wall-clock; FIM numbers are real CPU wall-clock.
 def main():
     reports = load_reports()
     parts = [HEADER]
+
+    headline = load_bench("BENCH_headline.json")
+    if headline:
+        parts.append("\n## §Headline (Apriori vs RDD-Eclat, scale x mesh, "
+                     "checksum-verified)\n")
+        parts.append(headline_table(headline))
+        parts.append("")
 
     engine = load_bench("BENCH_engine.json")
     if engine:

@@ -1,7 +1,7 @@
 """EXPERIMENTS.md table generation: §Dry-run / §Roofline from reports/,
-§FIM engine from BENCH_engine.json, §Streaming from BENCH_streaming.json,
-§Shard-scale from BENCH_shardscale.json, §Grid-scale from
-BENCH_gridscale.json."""
+§Headline from BENCH_headline.json, §FIM engine from BENCH_engine.json,
+§Streaming from BENCH_streaming.json, §Shard-scale from
+BENCH_shardscale.json, §Grid-scale from BENCH_gridscale.json."""
 from __future__ import annotations
 
 import glob
@@ -11,7 +11,7 @@ from typing import Dict, List, Optional
 
 __all__ = ["load_reports", "load_bench", "roofline_table", "dryrun_table",
            "perf_log_table", "fim_table", "streaming_table",
-           "shardscale_table", "gridscale_table"]
+           "shardscale_table", "gridscale_table", "headline_table"]
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -140,6 +140,47 @@ def load_bench(path: str) -> Optional[dict]:
         return None
     with open(path) as f:
         return json.load(f)
+
+
+def headline_table(bench: dict) -> str:
+    """Markdown: the Apriori-vs-Eclat scaling study (BENCH_headline.json) —
+    the paper's headline claim, checksum-verified per cell."""
+    rows = [
+        f"Dataset {bench['dataset']}, min_sup={bench['min_sup']}, jax "
+        f"backend `{bench['jax_backend']}`"
+        + (", smoke scale" if bench.get("smoke") else "")
+        + ".  Every cell below mined the **checksum-identical** "
+        "(itemset, support) set as the Apriori baseline — `apriori_mine` "
+        "is the differential oracle, and any divergence fails the bench "
+        "and CI.  Speedups are Apriori wall / Eclat wall at the same "
+        "scale (>1 = Eclat faster).\n",
+    ]
+    for s in bench["scales"]:
+        rows.append(
+            f"**x{s['scale']}** ({s['n_txn']} txns): Apriori "
+            f"{s['apriori']['wall_s']*1e3:.0f}ms, "
+            f"{s['apriori']['itemsets']} itemsets, levels "
+            f"{s['apriori']['levels']}.\n")
+        rows.append("| variant | "
+                    + " | ".join(f"{n}-dev wall | {n}-dev speedup"
+                                 for n in bench["mesh_sizes"]) + " |")
+        rows.append("|---|" + "---|" * 2 * len(bench["mesh_sizes"]))
+        for v in bench["variants"]:
+            cells = []
+            for n in bench["mesh_sizes"]:
+                c = s["eclat"][str(n)][v]
+                cells.append(f"{c['wall_s']*1e3:.0f}ms")
+                cells.append(f"x{c['speedup_vs_apriori']:.2f}")
+            rows.append(f"| {v} | " + " | ".join(cells) + " |")
+        b = s["best"]
+        rows.append(f"\nBest at this scale: **{b['variant']}** on "
+                    f"{b['mesh']} device(s), **x{b['speedup']:.2f}** vs "
+                    f"Apriori.\n")
+    rows.append(
+        f"Across all scales/meshes/variants: speedup range "
+        f"**x{bench['speedup_min']:.2f} – x{bench['speedup_max']:.2f}**, "
+        f"checksums identical: **{bench['checksums_identical']}**.")
+    return "\n".join(rows)
 
 
 def fim_table(bench: dict) -> str:

@@ -5,6 +5,7 @@ Public surface:
   make_engine / available_backends      pluggable device-executor backends
   apriori_mine                          YAFIM-style Spark-Apriori baseline
   bruteforce_fim                        exact oracle for tests
+  closed/maximal_itemsets, top_k_mine   workload modes (lineage post-filters)
   build_vertical / filter_transactions  vertical DB construction
   assign_partitions / partition_stats   equivalence-class partitioners
   recover_partition                     lineage-based partition recovery
@@ -17,6 +18,9 @@ from .engine import (Engine, LevelResult, available_backends, make_engine,
 from .itemsets import ItemsetStore, LevelRecord, generate_rules
 from .lineage import load_mining_checkpoint, recover_partition, save_mining_checkpoint
 from .oracle import bruteforce_fim
+from .postfilter import (WORKLOAD_MODES, TopKResult, closed_itemsets,
+                         filter_mode, frequent_from_closed, maximal_itemsets,
+                         top_k_mine)
 from .partitioners import (
     PARTITIONERS,
     assign_partitions,
@@ -37,6 +41,8 @@ __all__ = [
     "ItemsetStore", "LevelRecord", "generate_rules",
     "load_mining_checkpoint", "recover_partition", "save_mining_checkpoint",
     "bruteforce_fim",
+    "WORKLOAD_MODES", "TopKResult", "closed_itemsets", "filter_mode",
+    "frequent_from_closed", "maximal_itemsets", "top_k_mine",
     "PARTITIONERS", "assign_partitions", "default_partitioner",
     "greedy_partitioner", "hash_partitioner", "partition_stats",
     "reverse_hash_partitioner",

@@ -78,6 +78,13 @@ def apriori_mine(
     cand_chunk: int = 8192,
 ) -> AprioriResult:
     t_start = time.perf_counter()
+    # same boundary semantics as the Eclat drivers (the differential-oracle
+    # contract): max_k >= 1 or None, never silently coerced
+    if max_k is not None and max_k < 1:
+        raise ValueError(f"max_k must be >= 1 (or None for unbounded), "
+                         f"got {max_k}")
+    if cand_chunk < 1:
+        raise ValueError(f"cand_chunk must be >= 1, got {cand_chunk}")
     n_txn = len(transactions)
     # same type-based fraction/count disambiguation as Eclat, so the
     # baseline and the paper variants stay comparable at any threshold
@@ -107,7 +114,9 @@ def apriori_mine(
 
     frequent_prev: List[Tuple[int, ...]] = sorted((int(c),) for c in range(n1))
     k = 1
-    kmax = max_k or n1
+    # NOT `max_k or n1`: with the old truthiness coercion an (invalid but
+    # accepted) max_k=0 silently meant "unbounded" — the opposite direction
+    kmax = n1 if max_k is None else max_k
     while frequent_prev and k < kmax:
         k += 1
         t0 = time.perf_counter()

@@ -95,6 +95,7 @@ class EclatConfig:
     use_diffsets: bool = False          # v6 only (dEclat); other variants reject it
     backend: str = "pallas"             # jnp | pallas | sharded | tidsharded | grid ("batched" = legacy alias)
     shard: str = "pairs"                # mesh split: "pairs" (frontier replicated) | "words" (tid axis, DESIGN.md §7) | "grid" (pairs x words 2D mesh, DESIGN.md §8)
+    mode: str = "all"                   # workload: all | closed | maximal (lineage post-filter, DESIGN.md §9)
     max_k: Optional[int] = None         # deepest itemset length to mine (>= 1); None = unbounded
     bucket_min: int = 1024              # pair-buffer bucket-ladder floor
     chunk_pairs: int = 1 << 18          # level-2 chunking when tri-matrix off
@@ -110,6 +111,7 @@ class EclatResult:
     store: ItemsetStore
     db: VerticalDB
     stats: dict
+    mode: str = "all"                   # the workload mode this run mined for
 
     @property
     def counts(self) -> List[int]:
@@ -123,7 +125,16 @@ class EclatResult:
         return self.store.itemsets()
 
     def support_map(self):
+        """The full frequent map (every mode mines the whole lattice —
+        closed/maximal are post-filters over it, see :meth:`workload_map`)."""
         return self.store.support_map()
+
+    def workload_map(self):
+        """The mode-filtered map this run was configured for: the full
+        frequent map for ``mode="all"``, its closed or maximal subset
+        otherwise (DESIGN.md §9)."""
+        from .postfilter import filter_mode
+        return filter_mode(self.store.support_map(), self.mode)
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +210,20 @@ def _build_db(transactions, n_items, abs_min_sup, spec, mesh) -> Tuple[VerticalD
     return db, info
 
 
+def _finish(store: ItemsetStore, db: VerticalDB, stats: dict,
+            config: EclatConfig, t_start: float) -> EclatResult:
+    """Common tail of every ``mine()`` return path: record the workload
+    mode (and, for closed/maximal, the post-filtered count — the filter
+    itself is lazy via :meth:`EclatResult.workload_map`) and stamp wall
+    time last so it covers the mode bookkeeping too."""
+    stats["mode"] = config.mode
+    res = EclatResult(store=store, db=db, stats=stats, mode=config.mode)
+    if config.mode != "all":
+        stats["mode_itemsets"] = len(res.workload_map())
+    stats["total_s"] = time.perf_counter() - t_start
+    return res
+
+
 def mine(
     transactions: Sequence[Sequence[int]],
     n_items: int,
@@ -217,6 +242,10 @@ def mine(
     if config.max_k is not None and config.max_k < 1:
         raise ValueError(f"max_k must be >= 1 (or None for unbounded), "
                          f"got {config.max_k}")
+    from .postfilter import WORKLOAD_MODES
+    if config.mode not in WORKLOAD_MODES:
+        raise ValueError(f"unknown workload mode {config.mode!r}; "
+                         f"expected one of {WORKLOAD_MODES}")
     t_start = time.perf_counter()
     stats: dict = {"variant": config.variant, "phase_s": {}}
 
@@ -274,8 +303,7 @@ def mine(
     max_k = n1 if config.max_k is None else config.max_k
     if n1 < 2 or max_k < 2:
         stats.update(execu.stats())
-        stats["total_s"] = time.perf_counter() - t_start
-        return EclatResult(store=store, db=db, stats=stats)
+        return _finish(store, db, stats, config, t_start)
 
     # place the level-1 frontier the way the backend carries it, once —
     # the chunked no-tri-matrix path below expands the same frontier many
@@ -375,5 +403,4 @@ def mine(
     stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
 
     stats.update(execu.stats())
-    stats["total_s"] = time.perf_counter() - t_start
-    return EclatResult(store=store, db=db, stats=stats)
+    return _finish(store, db, stats, config, t_start)

@@ -1,5 +1,6 @@
-"""repro.data — transaction generators (paper datasets, micro-batch streams)
-+ LM token pipeline."""
+"""repro.data — transaction generators (paper datasets, micro-batch streams),
+FIMI-format file ingestion (retail.dat et al.) + LM token pipeline."""
+from .fimi import fimi_universe, load_fimi, parse_fimi, write_fimi
 from .lm_pipeline import TokenPipeline
 from .stream import stream_spec, transaction_stream
 from .synthetic import (DatasetSpec, PAPER_DATASETS, attribute_table,
@@ -7,4 +8,5 @@ from .synthetic import (DatasetSpec, PAPER_DATASETS, attribute_table,
 
 __all__ = ["TokenPipeline", "DatasetSpec", "PAPER_DATASETS", "attribute_table",
            "clickstream", "generate", "materialize", "quest",
-           "transaction_stream", "stream_spec"]
+           "transaction_stream", "stream_spec",
+           "fimi_universe", "load_fimi", "parse_fimi", "write_fimi"]

@@ -2,21 +2,38 @@
 
     PYTHONPATH=src python -m repro.launch.mine --dataset chess --min-sup 0.8 \
         --variant v5 --checkpoint-dir /tmp/mine_ckpt
+
+Workload modes (DESIGN.md §9): ``--mode closed|maximal`` post-filters the
+mined lattice, ``--top-k K`` replaces the threshold with the adaptive
+min_sup ladder, ``--fimi FILE.dat`` mines a FIMI-format file (retail.dat
+et al.) instead of a synthetic paper dataset.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
-from ..core import EclatConfig, generate_rules, mine
-from ..data import PAPER_DATASETS, generate
+from ..core import EclatConfig, generate_rules, mine, top_k_mine
+from ..data import PAPER_DATASETS, generate, load_fimi
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="chess", choices=list(PAPER_DATASETS))
+    ap.add_argument("--fimi", default=None, metavar="FILE.dat",
+                    help="mine a FIMI-format transaction file instead of "
+                         "--dataset (one txn per line, whitespace-separated "
+                         "integer item ids)")
     ap.add_argument("--scale", type=float, default=0.25)
     ap.add_argument("--min-sup", type=float, default=0.8)
+    ap.add_argument("--mode", default="all",
+                    choices=["all", "closed", "maximal"],
+                    help="workload mode: all frequent itemsets, or the "
+                         "closed/maximal subset (lineage post-filter)")
+    ap.add_argument("--top-k", type=int, default=None, metavar="K",
+                    help="mine the K highest-support itemsets via the "
+                         "adaptive min_sup ladder (--min-sup is ignored)")
     ap.add_argument("--variant", default="v4",
                     choices=["v1", "v2", "v3", "v4", "v5", "v6"])
     ap.add_argument("--p", type=int, default=10)
@@ -37,23 +54,48 @@ def main(argv=None):
                     help="if >0, also generate association rules")
     args = ap.parse_args(argv)
 
-    txns, spec = generate(args.dataset, scale=args.scale, seed=1)
+    if args.fimi:
+        txns, n_items = load_fimi(args.fimi)
+        name = os.path.basename(args.fimi)
+        tri_matrix = None                     # auto (item-id range heuristic)
+        scale_note = ""
+    else:
+        txns, spec = generate(args.dataset, scale=args.scale, seed=1)
+        name, n_items = spec.name, spec.n_items
+        tri_matrix = spec.tri_matrix or None
+        scale_note = f" x{args.scale}"
     cfg = EclatConfig(min_sup=args.min_sup, variant=args.variant, p=args.p,
-                      tri_matrix=spec.tri_matrix or None,
+                      tri_matrix=tri_matrix,
                       use_diffsets=args.diffsets,
                       backend=args.backend, shard=args.shard,
+                      mode=args.mode,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every_level=args.checkpoint_dir is not None)
     from .mesh import mesh_for_mining
     mesh = mesh_for_mining(args.backend, args.shard, args.grid)
+
+    if args.top_k is not None:
+        t0 = time.perf_counter()
+        tk = top_k_mine(txns, n_items, args.top_k, config=cfg, mesh=mesh)
+        dt = time.perf_counter() - t0
+        print(f"[mine] {name}{scale_note} top-{args.top_k} "
+              f"({len(tk.itemsets)} returned) in {dt:.2f}s: ladder "
+              f"{[r['abs_min_sup'] for r in tk.ladder]} -> "
+              f"abs_min_sup={tk.abs_min_sup}")
+        for itemset, sup in tk.itemsets[: min(args.top_k, 10)]:
+            print(f"[mine]   {itemset} sup={sup}")
+        return
+
     t0 = time.perf_counter()
-    res = mine(txns, spec.n_items, cfg, mesh=mesh)
+    res = mine(txns, n_items, cfg, mesh=mesh)
     dt = time.perf_counter() - t0
     grid_note = (f" grid={mesh.shape['class']}x{mesh.shape['data']}"
                  if mesh is not None and "class" in mesh.axis_names else "")
-    print(f"[mine] {spec.name} x{args.scale} min_sup={args.min_sup} "
+    mode_note = (f" {args.mode}={res.stats['mode_itemsets']}"
+                 if args.mode != "all" else "")
+    print(f"[mine] {name}{scale_note} min_sup={args.min_sup} "
           f"{args.variant}: {res.total} itemsets in {dt:.2f}s "
-          f"levels={res.counts}{grid_note}")
+          f"levels={res.counts}{grid_note}{mode_note}")
     if args.min_conf > 0:
         rules = generate_rules(res.support_map(), args.min_conf)
         print(f"[mine] {len(rules)} rules at conf>={args.min_conf}")

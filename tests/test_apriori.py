@@ -1,0 +1,105 @@
+"""Apriori baseline boundary semantics — the differential-oracle contract.
+
+``apriori_mine`` is raced against every engine backend by the headline
+bench and the differential property tests, so its boundary behavior
+(max_k, resolve_min_sup edge cases, degenerate databases) must match the
+Eclat drivers exactly — mirroring the PR 5 ``max_k`` matrix in
+tests/test_eclat_correctness.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import EclatConfig, apriori_mine, bruteforce_fim, mine
+
+
+def make_db(seed=7, n_items=10, n_txn=150, base=(0, 1, 2, 3)):
+    rng = np.random.default_rng(seed)
+    txns = []
+    for _ in range(n_txn):
+        t = set(rng.choice(n_items, size=rng.integers(3, 7), replace=False).tolist())
+        if rng.random() < 0.5:
+            t |= set(base)
+        txns.append(sorted(t))
+    return txns
+
+
+DB = make_db()
+ORACLE20 = bruteforce_fim(DB, min_sup=20)
+
+
+# ---------------------------------------------------------------------------
+# max_k matrix (mirrors test_max_k_boundaries_all_backends)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("max_k", [1, 2, 3, None])
+def test_apriori_max_k_boundaries(max_k):
+    """Apriori must return exactly the oracle truncated at max_k — the same
+    contract the five engine backends honor."""
+    res = apriori_mine(DB, 10, 20, max_k=max_k)
+    expect = {k: v for k, v in ORACLE20.items()
+              if max_k is None or len(k) <= max_k}
+    assert res.support_map == expect
+    if max_k is not None:
+        assert len(res.counts) <= max_k
+
+
+@pytest.mark.parametrize("max_k", [1, 2, 3, None])
+def test_apriori_max_k_matches_eclat_driver(max_k):
+    """Level-by-level agreement with mine() under the same max_k."""
+    ap = apriori_mine(DB, 10, 20, max_k=max_k)
+    ec = mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3, max_k=max_k))
+    assert ap.support_map == ec.support_map()
+    assert ap.counts == ec.counts
+    assert ap.total == ec.total
+
+
+def test_apriori_max_k_validation():
+    """Regression: ``max_k or n1`` read the (invalid) max_k=0 as *unbounded*
+    via truthiness; now every max_k < 1 is rejected like the Eclat driver."""
+    for bad in (0, -1):
+        with pytest.raises(ValueError, match="max_k"):
+            apriori_mine(DB, 10, 20, max_k=bad)
+
+
+def test_apriori_cand_chunk_validation():
+    with pytest.raises(ValueError, match="cand_chunk"):
+        apriori_mine(DB, 10, 20, cand_chunk=0)
+
+
+def test_apriori_tiny_cand_chunk_same_answer():
+    """Chunked candidate counting must not depend on the chunk size."""
+    assert apriori_mine(DB, 10, 20, cand_chunk=7).support_map == ORACLE20
+
+
+# ---------------------------------------------------------------------------
+# degenerate databases (empty / singleton universe), vs the Eclat drivers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("txns,n_items", [
+    ([], 8),                                  # empty database
+    ([[], [], []], 8),                        # all-empty transactions
+    ([[0], [0], []], 1),                      # singleton item universe
+    ([[0]], 1),                               # one txn, one item
+    ([[1, 3], [1, 3], [1, 3]], 5),            # every itemset ties at n_txn
+])
+def test_apriori_degenerate_matches_eclat(txns, n_items):
+    ap = apriori_mine(txns, n_items, 1)
+    ec = mine(txns, n_items, EclatConfig(min_sup=1, variant="v4", p=3))
+    assert ap.support_map == ec.support_map()
+    assert ap.total == ec.total
+
+
+def test_apriori_fraction_thresholds_match_eclat():
+    """resolve_min_sup is shared; the *resolved* behavior must agree on the
+    fraction/count boundary cases (1.0 = every txn, 0.5 = half, count 2)."""
+    for ms in (1.0, 0.5, 2):
+        ap = apriori_mine(DB, 10, ms)
+        ec = mine(DB, 10, EclatConfig(min_sup=ms, variant="v4", p=3))
+        assert ap.stats["abs_min_sup"] == ec.stats["abs_min_sup"]
+        assert ap.support_map == ec.support_map()
+
+
+def test_apriori_rejects_bad_min_sup():
+    for bad in (0, -1, 1.5, True):
+        with pytest.raises((ValueError, TypeError)):
+            apriori_mine(DB, 10, bad)

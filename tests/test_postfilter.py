@@ -1,0 +1,192 @@
+"""Workload-mode invariants: closed/maximal post-filters and top-k ladder.
+
+The lattice-theory contract (DESIGN.md §9):
+  maximal ⊆ closed ⊆ frequent,
+  closure reconstruction from the closed set recovers the full frequent
+  map with supports, and top-k returns exactly k (or all, if fewer) under
+  a deterministic tie rule.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (EclatConfig, bruteforce_fim, closed_itemsets,
+                        filter_mode, frequent_from_closed, maximal_itemsets,
+                        mine, top_k_mine)
+from repro.core.postfilter import topk_sort_key
+
+db_strategy = st.lists(
+    st.lists(st.integers(0, 7), min_size=0, max_size=6),
+    min_size=1, max_size=60,
+)
+
+
+def make_db(seed=7, n_items=10, n_txn=120, base=(0, 1, 2, 3)):
+    rng = np.random.default_rng(seed)
+    txns = []
+    for _ in range(n_txn):
+        t = set(rng.choice(n_items, size=rng.integers(3, 7), replace=False).tolist())
+        if rng.random() < 0.5:
+            t |= set(base)
+        txns.append(sorted(t))
+    return txns
+
+
+DB = make_db()
+
+
+# ---------------------------------------------------------------------------
+# containment chain + closure reconstruction (property-based)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(db_strategy, st.integers(1, 15))
+def test_property_maximal_subset_closed_subset_frequent(txns, min_sup):
+    txns = [sorted(set(t)) for t in txns]
+    sm = bruteforce_fim(txns, min_sup)
+    cl = closed_itemsets(sm)
+    mx = maximal_itemsets(sm)
+    assert set(mx) <= set(cl) <= set(sm)
+    for s in cl:
+        assert cl[s] == sm[s]
+    for s in mx:
+        assert mx[s] == sm[s]
+    # definitional checks against the full map
+    for itemset, sup in sm.items():
+        has_equal_super = any(
+            len(other) > len(itemset) and set(itemset) < set(other)
+            and osup == sup for other, osup in sm.items())
+        has_any_super = any(
+            len(other) > len(itemset) and set(itemset) < set(other)
+            for other in sm)
+        assert (itemset in cl) == (not has_equal_super)
+        assert (itemset in mx) == (not has_any_super)
+
+
+@settings(max_examples=20, deadline=None)
+@given(db_strategy, st.integers(1, 15))
+def test_property_closure_reconstruction_recovers_frequent(txns, min_sup):
+    """The closed set is a lossless compression of the frequent set."""
+    txns = [sorted(set(t)) for t in txns]
+    sm = bruteforce_fim(txns, min_sup)
+    assert frequent_from_closed(closed_itemsets(sm)) == sm
+
+
+@settings(max_examples=10, deadline=None)
+@given(db_strategy, st.integers(1, 12), st.sampled_from(["closed", "maximal"]))
+def test_property_mine_mode_matches_postfiltered_oracle(txns, min_sup, mode):
+    """EclatConfig.mode plumbs the post-filter through mine() itself."""
+    txns = [sorted(set(t)) for t in txns]
+    res = mine(txns, 8, EclatConfig(min_sup=min_sup, variant="v4", p=3,
+                                    mode=mode))
+    oracle = filter_mode(bruteforce_fim(txns, min_sup), mode)
+    assert res.workload_map() == oracle
+    assert res.stats["mode"] == mode
+    assert res.stats["mode_itemsets"] == len(oracle)
+    # the full lattice is still there underneath the filter
+    assert res.support_map() == bruteforce_fim(txns, min_sup)
+
+
+def test_mode_all_is_identity():
+    res = mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3))
+    assert res.mode == "all"
+    assert res.workload_map() == res.support_map()
+    assert "mode_itemsets" not in res.stats
+
+
+def test_unknown_mode_rejected():
+    with pytest.raises(ValueError, match="workload mode"):
+        mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3, mode="open"))
+    with pytest.raises(ValueError, match="workload mode"):
+        filter_mode({}, "open")
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "sharded",
+                                     "tidsharded", "grid"])
+def test_modes_identical_across_backends(backend):
+    """closed/maximal are host-side post-filters on the lineage, so every
+    engine backend must hand back the identical filtered maps."""
+    import jax
+    from repro.dist.compat import make_mesh
+    shard = {"tidsharded": "words", "grid": "grid"}.get(backend, "pairs")
+    mesh = (make_mesh((2, 2), ("class", "data"), devices=jax.devices()[:4])
+            if backend == "grid" else
+            make_mesh((4,), ("data",)) if backend in ("sharded", "tidsharded")
+            else None)
+    oracle = bruteforce_fim(DB, 20)
+    for mode in ("closed", "maximal"):
+        res = mine(DB, 10, EclatConfig(min_sup=20, variant="v4", p=3,
+                                       backend=backend, shard=shard,
+                                       bucket_min=32, mode=mode),
+                   mesh=mesh)
+        assert res.workload_map() == filter_mode(oracle, mode)
+
+
+# ---------------------------------------------------------------------------
+# top-k: exactly k (or all), deterministic ties, threshold-free
+# ---------------------------------------------------------------------------
+
+def _oracle_topk(txns, k, min_len=1):
+    sm = [(s, v) for s, v in bruteforce_fim(txns, 1).items()
+          if len(s) >= min_len]
+    return sorted(sm, key=topk_sort_key)[:k]
+
+
+@pytest.mark.parametrize("k", [1, 5, 17, 10_000])
+def test_topk_exactly_k_or_all(k):
+    tk = top_k_mine(DB, 10, k)
+    total = len(bruteforce_fim(DB, 1))
+    assert len(tk.itemsets) == min(k, total)
+    assert tk.itemsets == _oracle_topk(DB, k)
+    sups = [s for _, s in tk.itemsets]
+    assert sups == sorted(sups, reverse=True)
+
+
+def test_topk_deterministic_tie_rule():
+    """Equal supports order by (length asc, items lex asc) — and repeat
+    calls return the identical list."""
+    txns = [[0, 1], [0, 1], [2], [2], [3, 4], [3, 4]]
+    tk = top_k_mine(txns, 5, 4)
+    assert tk.itemsets == top_k_mine(txns, 5, 4).itemsets
+    assert tk.itemsets == [((0,), 2), ((1,), 2), ((2,), 2), ((3,), 2)]
+
+
+def test_topk_ladder_is_recorded_and_monotone():
+    tk = top_k_mine(DB, 10, 12)
+    assert tk.ladder, "ladder rungs must be recorded"
+    rungs = [r["abs_min_sup"] for r in tk.ladder]
+    assert rungs == sorted(rungs, reverse=True)
+    assert tk.abs_min_sup == rungs[-1]
+    # enough itemsets cleared the final rung
+    assert tk.ladder[-1]["n_found"] >= min(12, len(bruteforce_fim(DB, 1)))
+
+
+def test_topk_min_len_uses_deeper_rungs():
+    """min_len=2 cannot rely on the singleton-support seed rung alone; the
+    halving fallback must still find the k best pairs-and-longer."""
+    tk = top_k_mine(DB, 10, 6, min_len=2)
+    assert len(tk.itemsets) == 6
+    assert all(len(s) >= 2 for s, _ in tk.itemsets)
+    assert tk.itemsets == _oracle_topk(DB, 6, min_len=2)
+
+
+def test_topk_fewer_than_k_items_returns_all():
+    txns = [[0], [0], [1]]
+    tk = top_k_mine(txns, 2, 50)
+    assert tk.itemsets == _oracle_topk(txns, 50)
+    assert tk.abs_min_sup == 1
+
+
+def test_topk_validation():
+    with pytest.raises(ValueError, match="k >= 1"):
+        top_k_mine(DB, 10, 0)
+    with pytest.raises(ValueError, match="min_len"):
+        top_k_mine(DB, 10, 3, min_len=0)
+
+
+def test_topk_respects_config_template():
+    """Backend/variant plumb through the ladder unchanged."""
+    tk = top_k_mine(DB, 10, 8, config=EclatConfig(min_sup=1, variant="v6",
+                                                  backend="jnp", p=3))
+    assert tk.stats["variant"] == "v6"
+    assert tk.itemsets == _oracle_topk(DB, 8)

@@ -2,12 +2,25 @@
 import numpy as np
 from _hypothesis_compat import given, settings, st
 
-from repro.core import EclatConfig, bruteforce_fim, mine
+from repro.core import EclatConfig, apriori_mine, bruteforce_fim, mine
 
 db_strategy = st.lists(
     st.lists(st.integers(0, 7), min_size=0, max_size=6),
     min_size=1, max_size=60,
 )
+
+ALL_BACKENDS = ("jnp", "pallas", "sharded", "tidsharded", "grid")
+
+
+def _mesh_for(backend):
+    """The mesh each engine backend needs (conftest forces 4 host devices)."""
+    import jax
+    from repro.dist.compat import make_mesh
+    if backend in ("sharded", "tidsharded"):
+        return make_mesh((4,), ("data",))
+    if backend == "grid":
+        return make_mesh((2, 2), ("class", "data"), devices=jax.devices()[:4])
+    return None
 
 
 @settings(max_examples=25, deadline=None)
@@ -31,6 +44,26 @@ def test_property_antimonotone(txns, min_sup):
             sub = tuple(x for i, x in enumerate(iset) if i != drop)
             if sub:
                 assert sub in sm and sm[sub] >= sup
+
+
+@settings(max_examples=8, deadline=None)
+@given(db_strategy, st.integers(1, 20))
+def test_property_apriori_differential_all_backends(txns, min_sup):
+    """Differential oracle: random baskets mined by the horizontal Apriori
+    baseline and by all five engine backends must produce the identical
+    (itemset, support) set — two independent algorithm families (level-wise
+    horizontal rescan vs vertical tidset intersection) agreeing on random
+    inputs is the cross-implementation contract the headline bench relies
+    on (DESIGN.md §9)."""
+    txns = [sorted(set(t)) for t in txns]
+    expect = apriori_mine(txns, 8, min_sup).support_map
+    for backend in ALL_BACKENDS:
+        shard = {"tidsharded": "words", "grid": "grid"}.get(backend, "pairs")
+        got = mine(txns, 8, EclatConfig(min_sup=min_sup, variant="v4", p=3,
+                                        backend=backend, shard=shard,
+                                        bucket_min=32),
+                   mesh=_mesh_for(backend)).support_map()
+        assert got == expect, f"backend {backend} diverges from apriori"
 
 
 @settings(max_examples=20, deadline=None)
