@@ -10,11 +10,15 @@ import jax.numpy as jnp
 
 
 def _time(fn, *args, reps=5) -> float:
-    fn(*args)  # compile + warm
+    """Steady-state seconds per call: the first (trace+compile) call is
+    excluded from the timed region, and every timed rep is blocked to
+    completion — without the per-rep block, async dispatch lets reps queue
+    and the 'average' mostly measures dispatch, not the kernel."""
+    jax.block_until_ready(fn(*args))  # trace + compile, not timed
+    jax.block_until_ready(fn(*args))  # steady-state warm-up
     t0 = time.perf_counter()
     for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps
 
 

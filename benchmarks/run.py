@@ -16,6 +16,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                        vs mesh size -> BENCH_shardscale.json
   gridscale            2D (pairs x words) grid parity + per-axis
                        work/memory vs the 1D modes -> BENCH_gridscale.json
+  kerneltune           autotune sweep + tuned-vs-default (checksum-gated)
+                       + measured backend crossover -> BENCH_kerneltune.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
@@ -37,6 +39,7 @@ from benchmarks.fim_benchmarks import (fim_cores, fim_minsup, fim_scale,
                                        partitioner_balance)
 from benchmarks.gridscale_bench import gridscale_bench
 from benchmarks.headline_bench import headline_bench
+from benchmarks.kerneltune_bench import kerneltune_bench
 from benchmarks.micro import kernel_microbench, moe_balance
 from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
@@ -52,6 +55,7 @@ TABLES = {
     "streaming": streaming_bench,
     "shardscale": shardscale_bench,
     "gridscale": gridscale_bench,
+    "kerneltune": kerneltune_bench,
     "moe_balance": moe_balance,
 }
 
@@ -70,6 +74,7 @@ def main() -> None:
         "streaming": functools.partial(streaming_bench, smoke=True),
         "shardscale": functools.partial(shardscale_bench, smoke=True),
         "gridscale": functools.partial(gridscale_bench, smoke=True),
+        "kerneltune": functools.partial(kerneltune_bench, smoke=True),
     } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
     failures = []

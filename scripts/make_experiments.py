@@ -9,7 +9,8 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.analysis.report import (dryrun_table, fim_table, gridscale_table,
-                                   headline_table, load_bench, load_reports,
+                                   headline_table, kerneltune_table,
+                                   load_bench, load_reports,
                                    perf_log_table, roofline_table,
                                    shardscale_table, streaming_table)
 
@@ -82,6 +83,12 @@ def main():
         parts.append("\n\n## §Grid-scale (2D pairs x words mesh vs the 1D "
                      "modes)\n")
         parts.append(gridscale_table(gridscale))
+
+    kerneltune = load_bench("BENCH_kerneltune.json")
+    if kerneltune:
+        parts.append("\n\n## §Kernel-tune (autotuned tiles + measured "
+                     "dispatch crossover)\n")
+        parts.append(kerneltune_table(kerneltune))
 
     if reports:
         parts.append("\n\n## §Dry-run (compile proof, memory, collective schedule)\n")

@@ -1,7 +1,8 @@
 """EXPERIMENTS.md table generation: §Dry-run / §Roofline from reports/,
 §Headline from BENCH_headline.json, §FIM engine from BENCH_engine.json,
 §Streaming from BENCH_streaming.json, §Shard-scale from
-BENCH_shardscale.json, §Grid-scale from BENCH_gridscale.json."""
+BENCH_shardscale.json, §Grid-scale from BENCH_gridscale.json,
+§Kernel-tune from BENCH_kerneltune.json."""
 from __future__ import annotations
 
 import glob
@@ -11,7 +12,8 @@ from typing import Dict, List, Optional
 
 __all__ = ["load_reports", "load_bench", "roofline_table", "dryrun_table",
            "perf_log_table", "fim_table", "streaming_table",
-           "shardscale_table", "gridscale_table", "headline_table"]
+           "shardscale_table", "gridscale_table", "headline_table",
+           "kerneltune_table"]
 
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
@@ -311,6 +313,52 @@ def gridscale_table(bench: dict) -> str:
         f"**x{bench['pairwork_reduction_vs_words']:.2f}** lower than "
         f"`words` (~n_class={n_class}), at identical supports: "
         f"{bench['placement_supports_identical']}.")
+    return "\n".join(rows)
+
+
+def kerneltune_table(bench: dict) -> str:
+    """Markdown: autotune sweep + tuned-vs-default gate + the measured
+    backend crossover behind `resolve_engine("auto")`
+    (BENCH_kerneltune.json, DESIGN.md §6)."""
+    rows = [
+        f"Jax backend `{bench['jax_backend']}`"
+        + (", smoke scale" if bench.get("smoke") else "")
+        + f"; autotune cache `{bench.get('autotune_cache', '?')}`.\n",
+        "Autotune sweep — per shape class, steady-state seconds per "
+        "candidate tile width (compile excluded; off-TPU the fused path "
+        "has no tile knob, so the candidate list honestly collapses):\n",
+        "| shape class | candidates | tuned block_w | model pick | agrees "
+        "| steady |",
+        "|---|---|---|---|---|---|",
+    ]
+    for s in bench.get("shapes", []):
+        rows.append(
+            f"| `{s['key']}` | {len(s['candidates'])} "
+            f"| {s['tuned_block_w']} | {s['model_pick']} "
+            f"| {s['model_agrees']} | {_fmt_ms(s['steady_s'])} |")
+    tvd = bench.get("tuned_vs_default")
+    if tvd:
+        rows.append(
+            f"\nTuned vs default (`block_w=512`, legacy two-dispatch "
+            f"compaction) on {tvd['dataset']} x{tvd['scale']} "
+            f"({tvd['n_txn']} txns): {_fmt_ms(tvd['default_wall_s'])} -> "
+            f"{_fmt_ms(tvd['tuned_wall_s'])} "
+            f"(**x{tvd['speedup']:.2f}**), itemset checksums identical: "
+            f"**{tvd['checksums_match']}** (`{tvd['itemset_checksum']}`).\n")
+    cells = bench.get("crossover", [])
+    if cells:
+        rows += [
+            "Measured backend crossover — the dispatch table "
+            "`resolve_engine(\"auto\")` loads (steady-state expand(), "
+            "best backend per cell):\n",
+            "| Q | W | best single-device | best mesh | fused vs jnp |",
+            "|---|---|---|---|---|",
+        ]
+        for c in cells:
+            rows.append(
+                f"| {c['q']} | {c['w']} | `{c['best_single']}` "
+                f"| `{c['best_mesh']}` "
+                f"| x{c['speedup_fused_vs_jnp']:.2f} |")
     return "\n".join(rows)
 
 

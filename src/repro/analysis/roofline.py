@@ -39,7 +39,16 @@ LINK_BW = 50e9
 
 __all__ = ["PEAK_FLOPS", "HBM_BW", "LINK_BW", "RooflineTerms", "CellReport",
            "roofline_terms", "model_flops", "measure_compiled",
-           "calibration_patterns"]
+           "calibration_patterns", "intersect_cost", "VPU_LANES",
+           "VPU_WORD_OPS"]
+
+# Vector-unit model for the mining hot loop (the fused gather+AND+popcount
+# kernel operates on uint32 words on the VPU, not the MXU): 8x128 lanes per
+# cycle at ~940 MHz -> word-ops/s.  popcount + AND + the accumulator add is
+# ~3 VPU ops per word.
+VPU_LANES = 8 * 128
+VPU_CLOCK = 0.94e9
+VPU_WORD_OPS = VPU_LANES * VPU_CLOCK
 
 
 @dataclasses.dataclass
@@ -121,6 +130,38 @@ def roofline_terms(flops, nbytes, wire_bytes) -> RooflineTerms:
         compute_s=flops / PEAK_FLOPS,
         memory_s=nbytes / HBM_BW,
         collective_s=wire_bytes / LINK_BW,
+    )
+
+
+def intersect_cost(q: int, w: int, block_w: int, *,
+                   ops_per_word: float = 3.0) -> RooflineTerms:
+    """Roofline terms for one fused gather+AND+popcount level expansion.
+
+    The kernel reads both parent rows once per word block and writes the
+    intersection once, so per pair the HBM traffic is ``3 * w * 4`` bytes
+    plus a per-block-step fixed overhead (the DMA descriptor + accumulator
+    spill each of the ``ceil(w / block_w)`` grid steps pays — the term that
+    penalizes tiny ``block_w``); compute is ``ops_per_word`` VPU word-ops
+    per word (AND + popcount + accumulate).  A ``block_w`` wider than the
+    lane-padded row is modeled as reading the padded row (the term that
+    penalizes over-wide blocks on narrow frontiers).  Used by
+    ``repro.kernels.autotune`` to order candidate tile widths before
+    measuring: the model seeds the sweep, measurement decides it.
+    """
+    q = max(int(q), 1)
+    w = max(int(w), 1)
+    bw = max(int(block_w), 1)
+    n_steps = -(-w // bw)                 # ceil: grid steps along the word axis
+    w_padded = n_steps * bw               # zero-padded words actually streamed
+    # 2 row reads + 1 intersection write, 4 bytes/word, plus ~512B of
+    # per-step DMA/bookkeeping overhead per operand (3 operands)
+    step_overhead_bytes = 3 * 512.0
+    bytes_moved = q * (3.0 * w_padded * 4.0 + n_steps * step_overhead_bytes)
+    word_ops = q * w_padded * ops_per_word
+    return RooflineTerms(
+        compute_s=word_ops / VPU_WORD_OPS,
+        memory_s=bytes_moved / HBM_BW,
+        collective_s=0.0,
     )
 
 

@@ -47,15 +47,22 @@ the row gather to ``_take``.  The shared helpers ``group_pairs_by_device``
 and ``_WordShardedFrontierMixin`` implement one axis each, so a backend
 composes them instead of copy-pasting an engine.
 
-Bucket ladder: pair batches are padded up to a power-of-two ladder
-(``bucket_min * 2**k``), so every XLA/Mosaic executable is compiled once per
-rung and reused across levels; the padded host-side index buffers themselves
-are persistent per rung (no per-call allocation or ``argsort`` churn for the
-single-device backends).
+Bucket ladder: pair batches are padded up to a half-power-of-two ladder
+(``bucket_min`` x {1, 1.5, 2, 3, 4, 6, 8, ...}), so every XLA/Mosaic
+executable is compiled once per rung and reused across levels while
+worst-case padding stays under ~33% (vs ~50% on the pure pow2 ladder); the
+padded host-side index buffers themselves are persistent per rung (no
+per-call allocation or ``argsort`` churn for the single-device backends).
+The default floor is 128 — the ladder is discrete, so a low floor costs at
+most a handful of extra one-time compiles, while a high one (the old 1024)
+dominated padding waste on small levels (BENCH_engine.json recorded
+``padding_efficiency: 0.115`` with every sub-floor level padded to 1024).
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from typing import Callable, Dict, List, Optional, Tuple, Type
 
 import numpy as np
@@ -67,7 +74,10 @@ from ..dist.compat import shard_map, shard_map_unchecked
 from ..dist.sharding import (grid_block_spec, grid_pair_spec, shard_words,
                              word_shard_spec)
 from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
-                                       MODE_TIDSET, fused_intersect,
+                                       MODE_TIDSET, compact_epilogue,
+                                       fused_intersect,
+                                       fused_intersect_compact,
+                                       fused_intersect_compact_ref,
                                        fused_intersect_partial,
                                        fused_intersect_partial_ref,
                                        fused_intersect_ref)
@@ -77,6 +87,7 @@ __all__ = [
     "LevelResult", "Engine", "JnpEngine", "PallasEngine", "ShardedEngine",
     "TidShardedEngine", "GridShardedEngine", "group_pairs_by_device",
     "register_backend", "available_backends", "make_engine", "resolve_engine",
+    "DispatchPolicy", "KERNELTUNE_ENV",
 ]
 
 
@@ -106,9 +117,20 @@ class LevelResult:
 
 
 def bucket_size(n: int, floor: int) -> int:
-    """Smallest power-of-two ladder rung >= n (>= floor)."""
+    """Smallest ladder rung >= n (>= floor).
+
+    The ladder is half-power-of-two: ``floor * {1, 1.5, 2, 3, 4, 6, 8, ...}``
+    rather than pure doubling.  Pure powers of two waste up to ~50% of every
+    padded batch in the worst case (n just past a rung); the 1.5x
+    intermediate rungs cap that at ~33% for ~2x the executable count — a
+    measured win for the engine benchmarks, whose level-1/2 frontier counts
+    routinely land just past a power of two (BENCH_engine.json
+    padding_efficiency was 0.115 on the pure-pow2 ladder)."""
     b = max(int(floor), 1)
     while b < n:
+        h = b + (b >> 1)
+        if n <= h:
+            return h
         b <<= 1
     return b
 
@@ -216,36 +238,122 @@ def make_engine(
     backend: str,
     *,
     mesh: Optional[jax.sharding.Mesh] = None,
-    bucket_min: int = 1024,
+    bucket_min: int = 128,
     interpret: Optional[bool] = None,
     inner: str = "pallas",
+    block_w: Optional[int] = None,
+    compact: bool = True,
+    autotune: bool = False,
 ) -> "Engine":
     """Construct a backend by registry name.
 
     ``sharded`` / ``tidsharded`` / ``grid`` require a mesh (``grid`` a 2D
     one with ``("class", "data")`` axes); ``interpret`` forces the Pallas
     kernel's interpreter (tests) instead of the TPU/ref dispatch.
+    ``block_w`` / ``compact`` / ``autotune`` are the kernel-config knobs
+    every backend accepts (see :class:`Engine`).
     """
     cls = BACKENDS.get(backend)
     if cls is None:
         raise ValueError(f"unknown engine backend {backend!r}; "
                          f"available: {available_backends()}")
+    kcfg = dict(block_w=block_w, compact=compact, autotune=autotune)
     if backend in ("sharded", "tidsharded", "grid"):
         if mesh is None:
             raise ValueError(f"{backend} backend requires a mesh")
         return cls(mesh, bucket_min=bucket_min, inner=inner,
-                   interpret=interpret)
+                   interpret=interpret, **kcfg)
     if backend == "pallas":
-        return PallasEngine(bucket_min=bucket_min, interpret=interpret)
-    return cls(bucket_min=bucket_min)
+        return PallasEngine(bucket_min=bucket_min, interpret=interpret,
+                            **kcfg)
+    return cls(bucket_min=bucket_min, **kcfg)
+
+
+# ---------------------------------------------------------------------------
+# measured dispatch policy (BENCH_kerneltune.json crossover table)
+# ---------------------------------------------------------------------------
+
+KERNELTUNE_ENV = "REPRO_KERNELTUNE_TABLE"
+
+
+def _default_policy_paths() -> List[str]:
+    paths = []
+    env = os.environ.get(KERNELTUNE_ENV)
+    if env:
+        paths.append(env)
+    paths.append(os.path.join(os.getcwd(), "BENCH_kerneltune.json"))
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    paths.append(os.path.join(root, "BENCH_kerneltune.json"))
+    return paths
+
+
+class DispatchPolicy:
+    """Backend choice from *measured* crossovers, not assumptions.
+
+    ``benchmarks/kerneltune_bench.py`` sweeps the backends over a Q x W
+    grid and records, per cell, which backend won single-device and which
+    won mesh-mapped (``BENCH_kerneltune.json["crossover"]``).  This class
+    loads that table and answers "which backend for an expansion of ~q
+    pairs over ~w words?" by nearest measured cell in log space — the
+    measured replacement for the hand-waved dispatch table DESIGN.md §6
+    used to carry.  Missing / unreadable / empty tables load as ``None``
+    so ``resolve_engine(auto=...)`` can fall back to the static default
+    (pallas, or the mesh-implied backend) instead of guessing.
+    """
+
+    def __init__(self, cells: List[dict], source: Optional[str] = None):
+        self.cells = [c for c in cells
+                      if "q" in c and "w" in c and c.get("best_single")]
+        self.source = source
+
+    @classmethod
+    def load(cls, path: Optional[str] = None) -> Optional["DispatchPolicy"]:
+        for p in ([path] if path else _default_policy_paths()):
+            try:
+                with open(p) as f:
+                    data = json.load(f)
+            except (OSError, ValueError):
+                continue
+            cells = data.get("crossover", [])
+            if cells:
+                policy = cls(cells, source=p)
+                if policy.cells:
+                    return policy
+        return None
+
+    def choose(self, q: int, w: int, *, have_mesh: bool = False) -> str:
+        """Measured-best backend for a ~(q pairs, w words) expansion.
+
+        Nearest cell by euclidean distance in (log2 q, log2 w) — the bench
+        grid is log-spaced, so log distance matches its geometry.  With a
+        mesh the cell's ``best_mesh`` winner is used (falling back to the
+        single-device winner's mesh mapping when the sweep ran
+        single-device only)."""
+        lq, lw = np.log2(max(int(q), 1)), np.log2(max(int(w), 1))
+
+        def dist(c):
+            return ((np.log2(max(int(c["q"]), 1)) - lq) ** 2
+                    + (np.log2(max(int(c["w"]), 1)) - lw) ** 2)
+
+        cell = min(self.cells, key=dist)
+        if have_mesh:
+            return cell.get("best_mesh") or cell["best_single"]
+        return cell["best_single"]
 
 
 def resolve_engine(
     backend: str,
     mesh: Optional[jax.sharding.Mesh] = None,
     *,
-    bucket_min: int = 1024,
+    bucket_min: int = 128,
     shard: str = "pairs",
+    block_w: Optional[int] = None,
+    compact: bool = True,
+    autotune: bool = False,
+    auto: Optional[bool] = None,
+    hints: Optional[Tuple[int, int]] = None,
+    policy_path: Optional[str] = None,
 ) -> "Engine":
     """Map a (backend name, mesh, shard mode) request onto an engine.
 
@@ -256,54 +364,128 @@ def resolve_engine(
     (TidShardedEngine — the frontier's word axis distributed, pairs
     replicated; DESIGN.md §7), or ``"grid"`` (GridShardedEngine — pairs
     over a ``"class"`` axis AND words over a ``"data"`` axis of a 2D mesh;
-    DESIGN.md §8).  ``"batched"`` and ``"auto"`` are legacy aliases for the
-    single-device default (pallas); ``"sharded"`` / ``"tidsharded"`` /
-    ``"grid"`` without a mesh degrade gracefully to that default.  Naming a
-    mesh-mapped backend implies its shard mode (``sharded`` -> pairs,
+    DESIGN.md §8).  ``"sharded"`` / ``"tidsharded"`` / ``"grid"`` without a
+    mesh degrade gracefully to the single-device default (pallas).  Naming
+    a mesh-mapped backend implies its shard mode (``sharded`` -> pairs,
     ``tidsharded`` -> words, ``grid`` -> grid); combining one with a
     *different* non-default ``shard`` is contradictory and rejected rather
     than silently resolved to either side.  Both the batch driver
     (``core.eclat.mine``) and the streaming miner (``repro.streaming``)
     resolve their executors here.
+
+    **Measured dispatch**: ``backend="auto"`` (or ``auto=True``) consults
+    the :class:`DispatchPolicy` crossover table measured by
+    ``benchmarks/kerneltune_bench.py``, using ``hints=(est_pairs, words)``
+    — the driver's estimate of the dominant expansion shape — to pick the
+    backend nearest the measured winner (DESIGN.md §6).  The fallback is
+    always safe: no table, no hints, or an unknown winner resolves to the
+    static default exactly as before (``"batched"`` remains a legacy alias
+    for that default).  ``block_w`` / ``compact`` / ``autotune`` thread the
+    kernel-config knobs to whichever engine wins.
     """
     shard_to_backend = {"pairs": "sharded", "words": "tidsharded",
                         "grid": "grid"}
     if shard not in shard_to_backend:
         raise ValueError(f"unknown shard mode {shard!r}; "
                          "expected 'pairs', 'words' or 'grid'")
+    requested = backend
+    auto = (backend == "auto") if auto is None else bool(auto)
     if backend in ("batched", "auto"):
         backend = "pallas"
+    policy = None
+    if auto:
+        policy = DispatchPolicy.load(policy_path)
+        if policy is not None and hints is not None:
+            est_q, est_w = hints
+            choice = policy.choose(est_q, est_w, have_mesh=mesh is not None)
+            if choice in BACKENDS:
+                backend = choice
     implied = {"sharded": "pairs", "tidsharded": "words",
                "grid": "grid"}.get(backend)
     if implied is not None:
         # shard="pairs" is the config default, so only an explicit
-        # disagreement is a conflict
-        if shard not in ("pairs", implied):
+        # disagreement is a conflict — except under auto, where the policy
+        # (not the user) picked the backend and simply overrides the shard
+        if auto:
+            shard = implied
+        elif shard not in ("pairs", implied):
             raise ValueError(
                 f"backend {backend!r} implies shard={implied!r} but "
                 f"shard={shard!r} was requested; drop one of the two")
-        shard = implied
+        else:
+            shard = implied
+    kcfg = dict(block_w=block_w, compact=compact, autotune=autotune)
     if mesh is not None or backend in ("sharded", "tidsharded", "grid"):
         if mesh is None:
             backend = "pallas"
         else:
             inner = backend if backend in ("jnp", "pallas") else "pallas"
-            return make_engine(shard_to_backend[shard], mesh=mesh,
-                               bucket_min=bucket_min, inner=inner)
-    return make_engine(backend, bucket_min=bucket_min)
+            engine = make_engine(shard_to_backend[shard], mesh=mesh,
+                                 bucket_min=bucket_min, inner=inner, **kcfg)
+            engine.dispatch = {"requested": requested, "auto": auto,
+                              "policy": policy.source if policy else None}
+            return engine
+    engine = make_engine(backend, bucket_min=bucket_min, **kcfg)
+    engine.dispatch = {"requested": requested, "auto": auto,
+                       "policy": policy.source if policy else None}
+    return engine
 
 
 class Engine:
-    """Backend interface + shared accounting."""
+    """Backend interface + shared accounting.
+
+    Kernel-config knobs (shared by every backend, threaded from
+    ``EclatConfig`` / ``StreamConfig`` through :func:`resolve_engine`):
+
+    ``block_w``  explicit word-tile width for the fused kernel; ``None``
+                 resolves through the autotuned shape table at trace time
+                 (``kernels.autotune.lookup``, cost-model seed on a miss).
+    ``compact``  fold the survivor-compaction epilogue into the fused
+                 executable where the backend supports it (one dispatch,
+                 only survivors cross back) instead of the legacy host-mask
+                 -> separate-gather two-step.
+    ``autotune`` tune-on-miss: before dispatching a shape class that has no
+                 table entry, run the measured sweep (cheap: cost-model
+                 seeded, truncated) and cache the winner.
+    ``compact_min``  floor of the *survivor* bucket ladder — decoupled from
+                 the pair-batch floor because survivor counts collapse fast
+                 at deep levels; a 1024-row survivor rung for 12 survivors
+                 was most of BENCH_engine.json's 0.115 padding efficiency.
+    """
 
     name = "abstract"
 
-    def __init__(self, bucket_min: int = 1024):
+    def __init__(self, bucket_min: int = 128, *,
+                 block_w: Optional[int] = None,
+                 compact: bool = True,
+                 autotune: bool = False,
+                 compact_min: Optional[int] = None):
         self.buffers = PairBuffers(bucket_min)
+        self.block_w = None if block_w is None else int(block_w)
+        self.compact = bool(compact)
+        self.autotune = bool(autotune)
+        self.compact_min = (min(self.buffers.floor, 128)
+                            if compact_min is None else max(int(compact_min), 1))
         self.n_intersections = 0
         self.n_padded = 0
         self.device_pair_counts: List[np.ndarray] = []
+        self.level_padding: List[Tuple[int, int]] = []
         self.n_devices = 1
+
+    def _record_padding(self, q: int, padded: int) -> None:
+        """Per-level pair-padding ledger behind ``stats()['pair_padding']``."""
+        self.n_padded += padded - q
+        self.level_padding.append((int(q), int(padded)))
+
+    def _maybe_tune(self, q: int, w: int, mode: int) -> None:
+        """Tune-on-miss: warm the autotune table for this call shape so the
+        trace-time ``block_w=None`` lookup hits a measured entry.  No-op
+        unless ``autotune`` is on and no explicit ``block_w`` overrides it."""
+        if not self.autotune or self.block_w is not None:
+            return
+        from ..kernels import autotune as at
+        if at.load_table().get(at.shape_class(q, w, mode)) is None:
+            at.tune_shape(q, w, mode, reps=2, max_candidates=3)
 
     def expand(
         self,
@@ -333,12 +515,21 @@ class Engine:
 
     def _compact(self, block: jax.Array, sel: np.ndarray) -> jax.Array:
         """Gather survivor rows ``sel`` out of ``block``, padded to a
-        power-of-two rung (pad slots gather row 0) so the device gather and
-        every downstream expansion see ladder shapes, not raw counts."""
-        sb = bucket_size(max(int(sel.shape[0]), 1), self.buffers.floor)
+        ladder rung (pad slots gather row 0) so the device gather and
+        every downstream expansion see ladder shapes, not raw counts.
+        Uses the survivor floor ``compact_min``, not the pair floor."""
+        sb = bucket_size(max(int(sel.shape[0]), 1), self.compact_min)
         idx = np.zeros(sb, np.int32)
         idx[:sel.shape[0]] = sel
         return self._take(block, jnp.asarray(idx))
+
+    def _slice_survivors(self, compact: jax.Array, n_surv: int) -> jax.Array:
+        """Rung-slice a fused-epilogue compaction result: rows ``[:n_surv]``
+        are the survivors, the rung padding beyond them duplicates row 0 —
+        the same convention :meth:`_compact` produces, so the two paths are
+        interchangeable bit-for-bit."""
+        sb = bucket_size(max(int(n_surv), 1), self.compact_min)
+        return compact[:sb]
 
     def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
         """Place a frontier the way this backend will carry it (identity for
@@ -347,20 +538,32 @@ class Engine:
         placement."""
         return bitmaps
 
-    def snapshot(self) -> Tuple[int, int, int]:
+    def snapshot(self) -> Tuple[int, int, int, int]:
         """Counter snapshot, for per-call deltas on a long-lived engine
         (``stats(since=snapshot)`` — the streaming miner reports per-slide
         work, not lifetime totals)."""
         return (self.n_intersections, self.n_padded,
-                len(self.device_pair_counts))
+                len(self.device_pair_counts), len(self.level_padding))
 
-    def stats(self, since: Optional[Tuple[int, int, int]] = None) -> dict:
-        i0, p0, d0 = since if since is not None else (0, 0, 0)
+    def stats(self, since: Optional[Tuple[int, ...]] = None) -> dict:
+        i0, p0, d0, l0 = (tuple(since) + (0,) * 4)[:4] if since else (0,) * 4
         out = {
             "backend": self.name,
             "n_intersections": self.n_intersections - i0,
             "n_padded": self.n_padded - p0,
         }
+        levels = self.level_padding[l0:]
+        if levels:
+            tot_q = sum(q for q, _ in levels)
+            tot_p = sum(p for _, p in levels)
+            out["pair_padding"] = {
+                "per_level": [
+                    {"pairs": q, "padded_to": p,
+                     "efficiency": q / p if p else 1.0}
+                    for q, p in levels
+                ],
+                "efficiency": tot_q / tot_p if tot_p else 1.0,
+            }
         if self.device_pair_counts[d0:]:
             per_dev = np.sum(self.device_pair_counts[d0:], axis=0)
             out["device_balance"] = {
@@ -383,7 +586,12 @@ def _take_rows(arr: jax.Array, idx: jax.Array) -> jax.Array:
 
 @register_backend("jnp")
 class JnpEngine(Engine):
-    """Unfused reference: gather via ``jnp.take``, AND+popcount, host mask."""
+    """XLA reference executor: one fused jit (gather + AND + popcount +
+    threshold), the semantics every other backend must match bit-exactly.
+    With ``compact`` (default) the survivor-compaction epilogue runs inside
+    the same jit — one dispatch, survivors only — via
+    :func:`fused_intersect_compact_ref`; ``compact=False`` keeps the legacy
+    host-mask -> separate-gather two-step."""
 
     def expand(self, bitmaps, left, right, sup_left, *, mode, min_sup,
                device_of_pair=None):
@@ -392,7 +600,16 @@ class JnpEngine(Engine):
             return self._empty(bitmaps)
         self.n_intersections += q
         qb, l, r, s = self.buffers.fill(left, right, sup_left)
-        self.n_padded += qb - q
+        self._record_padding(q, qb)
+        if self.compact:
+            out, sup, mask_dev, n_surv = fused_intersect_compact_ref(
+                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
+                jnp.int32(min_sup), jnp.int32(q), mode=mode)
+            mask = np.asarray(mask_dev)[:q].astype(bool)
+            sup_np = np.asarray(sup)[:q]
+            return LevelResult(mask=mask,
+                               supports=sup_np[mask].astype(np.int64),
+                               bitmaps=self._slice_survivors(out, int(mask.sum())))
         out, sup, _ = fused_intersect_ref(
             bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
             jnp.int32(min_sup), mode=mode)
@@ -416,8 +633,11 @@ class PallasEngine(Engine):
     intersection block stays on device and survivors are compacted there.
     """
 
-    def __init__(self, bucket_min: int = 1024, interpret: Optional[bool] = None):
-        super().__init__(bucket_min)
+    def __init__(self, bucket_min: int = 128, interpret: Optional[bool] = None,
+                 *, block_w: Optional[int] = None, compact: bool = True,
+                 autotune: bool = False, compact_min: Optional[int] = None):
+        super().__init__(bucket_min, block_w=block_w, compact=compact,
+                         autotune=autotune, compact_min=compact_min)
         self.interpret = interpret
 
     def expand(self, bitmaps, left, right, sup_left, *, mode, min_sup,
@@ -427,10 +647,22 @@ class PallasEngine(Engine):
             return self._empty(bitmaps)
         self.n_intersections += q
         qb, l, r, s = self.buffers.fill(left, right, sup_left)
-        self.n_padded += qb - q
+        self._record_padding(q, qb)
+        self._maybe_tune(qb, bitmaps.shape[1], mode)
+        if self.compact:
+            inter, sup, mask_dev, n_surv = fused_intersect_compact(
+                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
+                jnp.int32(min_sup), jnp.int32(q), mode=mode,
+                block_w=self.block_w, interpret=self.interpret)
+            mask = np.asarray(mask_dev)[:q].astype(bool)
+            sup_np = np.asarray(sup)[:q]
+            return LevelResult(mask=mask,
+                               supports=sup_np[mask].astype(np.int64),
+                               bitmaps=self._slice_survivors(inter, int(mask.sum())))
         inter, sup, mask_dev = fused_intersect(
             bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-            jnp.int32(min_sup), mode=mode, interpret=self.interpret)
+            jnp.int32(min_sup), mode=mode, block_w=self.block_w,
+            interpret=self.interpret)
         mask = np.asarray(mask_dev)[:q].astype(bool)
         sup_np = np.asarray(sup)[:q]
         sel = np.nonzero(mask)[0]
@@ -449,10 +681,13 @@ class ShardedEngine(Engine):
     device to a common bucket, run under ``shard_map`` with the frontier
     replicated — the paper's communication-free executor stage."""
 
-    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 1024,
+    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 128,
                  axis: str = "data", inner: str = "pallas",
-                 interpret: Optional[bool] = None):
-        super().__init__(bucket_min)
+                 interpret: Optional[bool] = None,
+                 *, block_w: Optional[int] = None, compact: bool = True,
+                 autotune: bool = False, compact_min: Optional[int] = None):
+        super().__init__(bucket_min, block_w=block_w, compact=compact,
+                         autotune=autotune, compact_min=compact_min)
         self.mesh = mesh
         self.axis = axis
         self.inner = inner
@@ -462,8 +697,13 @@ class ShardedEngine(Engine):
 
         def _local(bms, l, r, s, msup, _mode):
             if inner == "pallas":
+                # block_w=None resolves through the autotune table at trace
+                # time (shard-local shapes), so tuned widths reach the
+                # shard_map body without re-plumbing
                 inter, sup, _ = fused_intersect(bms, l, r, s, msup,
-                                                mode=_mode, interpret=interpret)
+                                                mode=_mode,
+                                                block_w=self.block_w,
+                                                interpret=interpret)
             else:
                 inter, sup, _ = fused_intersect_ref(bms, l, r, s, msup,
                                                     mode=_mode)
@@ -493,7 +733,9 @@ class ShardedEngine(Engine):
         qmax, lpad, rpad, spad, slot_of_pair, counts = group_pairs_by_device(
             left, right, sup_left, device_of_pair, d, self.buffers.floor)
         self.device_pair_counts.append(counts)
-        self.n_padded += d * qmax - q
+        self._record_padding(q, d * qmax)
+        # tune the shard-LOCAL trace shape: qmax pairs over the full width
+        self._maybe_tune(qmax, bitmaps.shape[1], mode)
         out, sup = self._sharded[mode](
             bitmaps,
             jnp.asarray(lpad.reshape(d * qmax)),
@@ -560,7 +802,8 @@ class _WordShardedFrontierMixin:
         return self._ensure_sharded(bitmaps)
 
     def _build_partial_kernels(self, inner: str, interpret: Optional[bool],
-                               pair_spec: P, block_spec: P) -> Dict[int, Callable]:
+                               pair_spec: P, block_spec: P,
+                               compact: bool = False) -> Dict[int, Callable]:
         """Per-mode ``jit(shard_map)`` executors over the partial fused
         kernel: shard-local intersect + popcount, one psum over the word
         (data) axis only — class shards, if any, own disjoint pair blocks
@@ -568,7 +811,17 @@ class _WordShardedFrontierMixin:
         min-support mask on the reduced value.  The pair/block specs are
         the only thing the word-sharded backends differ by: ``P()`` /
         ``P(None, data)`` for ``tidsharded`` (pairs replicated),
-        ``P(class)`` / ``P(class, data)`` for ``grid`` (pairs split)."""
+        ``P(class)`` / ``P(class, data)`` for ``grid`` (pairs split).
+
+        ``compact=True`` (tidsharded only — its pairs are replicated, so
+        survivor order is globally consistent across shards) additionally
+        runs the survivor-compaction epilogue *inside* the shard_map body:
+        the post-psum mask is replicated, so every shard gathers the same
+        survivor rows out of its own word slice, and the padded (Q, W)
+        block never exists outside the executable.  Callers pass the true
+        pair count ``n_valid`` as an extra traced operand (bucket-pad pairs
+        must not be compacted even when their garbage supports pass the
+        threshold)."""
         if inner not in ("jnp", "pallas"):
             raise ValueError(f"unknown inner executor {inner!r}")
         data_axis = self.data_axis
@@ -576,6 +829,7 @@ class _WordShardedFrontierMixin:
         def _local(bms, l, r, s, msup, _mode):
             if inner == "pallas":
                 inter, pop = fused_intersect_partial(bms, l, r, mode=_mode,
+                                                     block_w=self.block_w,
                                                      interpret=interpret)
             else:
                 inter, pop = fused_intersect_partial_ref(bms, l, r, mode=_mode)
@@ -586,6 +840,24 @@ class _WordShardedFrontierMixin:
 
         # pallas_call has no shard_map replication rule -> unchecked variant
         smap = shard_map_unchecked if inner == "pallas" else shard_map
+        if compact:
+            def _local_compact(bms, l, r, s, msup, nv, _mode):
+                inter, sup, mask = _local(bms, l, r, s, msup, _mode)
+                return compact_epilogue(inter, sup, mask, nv)
+
+            return {
+                mode: jax.jit(
+                    smap(
+                        lambda bms, l, r, s, m, nv, _mode=mode:
+                            _local_compact(bms, l, r, s, m, nv, _mode),
+                        mesh=self.mesh,
+                        in_specs=(self._spec, pair_spec, pair_spec,
+                                  pair_spec, P(), P()),
+                        out_specs=(block_spec, pair_spec, pair_spec, P()),
+                    )
+                )
+                for mode in (MODE_TIDSET, MODE_TID_TO_DIFF, MODE_DIFFSET)
+            }
         return {
             mode: jax.jit(
                 smap(
@@ -612,20 +884,27 @@ class TidShardedEngine(_WordShardedFrontierMixin, Engine):
     Per expansion, every shard intersects and popcounts its word slice for
     *all* pairs (the partial kernel), one ``psum`` across shards turns the
     partial counts into supports, and the min-support mask is applied to the
-    reduced value.  Survivor compaction is a shard-local row gather under a
-    ``P(None, axis)`` constraint, so the full (Q, W) intersection block never
-    materializes on any single device, the host, or the interconnect — only
-    the (Q,) count vector crosses shards.  This is the mode that lets a
+    reduced value.  Survivor compaction is shard-local: with ``compact``
+    (default) the prefix-sum compaction epilogue runs *inside* the shard_map
+    executable — the post-psum mask is replicated, so every shard gathers
+    the same survivor rows out of its own word slice in the same dispatch —
+    and with ``compact=False`` it is a separate row gather under a
+    ``P(None, axis)`` constraint.  Either way the full (Q, W) intersection
+    block never materializes on any single device, the host, or the
+    interconnect — only the (Q,) count vector crosses shards.  This is the mode that lets a
     window larger than one device's memory stay minable (DESIGN.md §7);
     trade-off vs the pair-sharded engine: every device does every pair's
     AND, but on 1/n of the words, so compute per device is unchanged while
     memory drops ~1/n.
     """
 
-    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 1024,
+    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 128,
                  axis: str = "data", inner: str = "pallas",
-                 interpret: Optional[bool] = None):
-        super().__init__(bucket_min)
+                 interpret: Optional[bool] = None,
+                 *, block_w: Optional[int] = None, compact: bool = True,
+                 autotune: bool = False, compact_min: Optional[int] = None):
+        super().__init__(bucket_min, block_w=block_w, compact=compact,
+                         autotune=autotune, compact_min=compact_min)
         self.inner = inner
         self._init_word_axis(mesh, axis)
         # pairs are never distributed in this mode: partition->device routing
@@ -633,7 +912,8 @@ class TidShardedEngine(_WordShardedFrontierMixin, Engine):
         # pair device to the drivers
         self.n_devices = 1
         self._sharded = self._build_partial_kernels(inner, interpret,
-                                                    P(), self._spec)
+                                                    P(), self._spec,
+                                                    compact=self.compact)
 
     def stats(self, since=None) -> dict:
         out = super().stats(since=since)
@@ -647,8 +927,20 @@ class TidShardedEngine(_WordShardedFrontierMixin, Engine):
             return self._empty(bitmaps)
         self.n_intersections += q
         qb, l, r, s = self.buffers.fill(left, right, sup_left)
-        self.n_padded += qb - q
+        self._record_padding(q, qb)
         bitmaps = self._ensure_sharded(bitmaps)
+        self._maybe_tune(qb, bitmaps.shape[1] // self.n_shards, mode)
+        if self.compact:
+            inter, sup, mask_dev, _ = self._sharded[mode](
+                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
+                jnp.int32(min_sup), jnp.int32(q))
+            mask = np.asarray(mask_dev)[:q].astype(bool)
+            sup_np = np.asarray(sup)[:q]
+            surv = jax.device_put(
+                self._slice_survivors(inter, int(mask.sum())), self._sharding)
+            return LevelResult(mask=mask,
+                               supports=sup_np[mask].astype(np.int64),
+                               bitmaps=surv)
         inter, sup, mask_dev = self._sharded[mode](
             bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
             jnp.int32(min_sup))
@@ -692,10 +984,17 @@ class GridShardedEngine(_WordShardedFrontierMixin, Engine):
     separately (executor count, database size), composed on one mesh.
     """
 
-    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 1024,
+    def __init__(self, mesh: jax.sharding.Mesh, bucket_min: int = 128,
                  class_axis: str = "class", data_axis: str = "data",
-                 inner: str = "pallas", interpret: Optional[bool] = None):
-        super().__init__(bucket_min)
+                 inner: str = "pallas", interpret: Optional[bool] = None,
+                 *, block_w: Optional[int] = None, compact: bool = True,
+                 autotune: bool = False, compact_min: Optional[int] = None):
+        # grid keeps the post-gather compaction path: its survivors live in
+        # per-class pad blocks whose order differs from global pair order,
+        # so in-executable compaction would emit them class-blocked;
+        # `compact` still tightens the survivor rung via _compact.
+        super().__init__(bucket_min, block_w=block_w, compact=compact,
+                         autotune=autotune, compact_min=compact_min)
         missing = [a for a in (class_axis, data_axis)
                    if a not in mesh.axis_names]
         if missing:
@@ -730,8 +1029,9 @@ class GridShardedEngine(_WordShardedFrontierMixin, Engine):
         qmax, lpad, rpad, spad, slot_of_pair, counts = group_pairs_by_device(
             left, right, sup_left, device_of_pair, d, self.buffers.floor)
         self.device_pair_counts.append(counts)
-        self.n_padded += d * qmax - q
+        self._record_padding(q, d * qmax)
         bitmaps = self._ensure_sharded(bitmaps)
+        self._maybe_tune(qmax, bitmaps.shape[1] // self.n_shards, mode)
         inter, sup, mask_dev = self._sharded[mode](
             bitmaps,
             jnp.asarray(lpad.reshape(d * qmax)),

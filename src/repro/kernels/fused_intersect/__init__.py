@@ -1,12 +1,20 @@
-from .fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET,
+from .fused_intersect import (DEFAULT_BLOCK_W, LANE, MODE_DIFFSET,
+                              MODE_TID_TO_DIFF, MODE_TIDSET, compact_epilogue,
+                              fused_intersect_compact_pairs,
                               fused_intersect_pairs,
-                              fused_intersect_partial_pairs)
-from .ops import fused_intersect, fused_intersect_partial
-from .ref import fused_intersect_partial_ref, fused_intersect_ref
+                              fused_intersect_partial_pairs, round_up_lanes)
+from .ops import (fused_intersect, fused_intersect_compact,
+                  fused_intersect_partial, resolve_block_w)
+from .ref import (fused_intersect_compact_ref, fused_intersect_partial_ref,
+                  fused_intersect_ref)
 
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
+    "DEFAULT_BLOCK_W", "LANE", "round_up_lanes", "resolve_block_w",
+    "compact_epilogue",
     "fused_intersect", "fused_intersect_pairs", "fused_intersect_ref",
+    "fused_intersect_compact", "fused_intersect_compact_pairs",
+    "fused_intersect_compact_ref",
     "fused_intersect_partial", "fused_intersect_partial_pairs",
     "fused_intersect_partial_ref",
 ]

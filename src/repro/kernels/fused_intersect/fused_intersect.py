@@ -14,12 +14,36 @@ Modes (match ``repro.core.engine``):
     1  tidset->diffset:  inter = a & ~b,  sup = sup_left - |inter|
     2  diffset:          inter = b & ~a,  sup = sup_left - |inter|
 
-The row gather uses ``PrefetchScalarGridSpec``: the pair-index array is a
-scalar-prefetch operand, so the input ``BlockSpec`` index maps read
-``idx_ref[0, q]`` / ``idx_ref[1, q]`` and the pipeline prefetches arbitrary
-frontier rows.  Grid = (Q, W/bw) with one pair row per grid step — the
-gathered rows are not contiguous, so the q dimension cannot be blocked; the
-DMA pipeline overlaps the row fetches instead.
+Raw-speed structure (ISSUE 7 / ROADMAP item 2):
+
+* **Scalar-prefetch row gather, double-buffered.**  The pair-index array is
+  a scalar-prefetch operand (``PrefetchScalarGridSpec``), so the input
+  ``BlockSpec`` index maps read ``idx_ref[0, q]`` / ``idx_ref[1, q]`` and
+  the Mosaic pipeline issues the row DMAs from the prefetched indices.  The
+  grid is (Q, W/bw) with the word axis innermost and the two parent rows as
+  *separate* operands: the pipeline keeps two buffers in flight per operand,
+  so the gather of step ``(q, j+1)`` (and of the next pair's first block)
+  overlaps the AND+popcount of step ``(q, j)``.  The q dimension cannot be
+  blocked — gathered rows are not contiguous — so overlap, not blocking, is
+  what hides the gather.
+* **Lane-aligned popcount accumulation.**  Block widths are rounded to the
+  VPU lane width (128); the running popcount is carried as a ``(1, 128)``
+  per-lane partial vector in VMEM scratch and only collapsed to a scalar on
+  the last word block.  Accumulating per-lane keeps every grid step a pure
+  element-wise VPU op (AND, popcount, add) with no cross-lane reduction in
+  the loop body.
+* **Survivor compaction in the fused executable.**  The ``*_compact``
+  variants append a prefix-sum survivor compaction (mask -> ascending
+  survivor indices -> row gather) to the kernel epilogue inside the same
+  jit, so one dispatch returns the min-sup mask, supports, *and* the
+  survivor-compacted block — the engine no longer round-trips the mask to
+  the host before launching a second gather dispatch, and only survivor
+  rows are live downstream (DESIGN.md §3, §6).
+
+``block_w`` is no longer a single hard-coded constant: callers that pass
+``None`` to the ``ops`` dispatch layer get the autotuned width for their
+(Q, W, mode) shape class (``repro.kernels.autotune``); ``DEFAULT_BLOCK_W``
+remains the seed/fallback value only.
 """
 from __future__ import annotations
 
@@ -31,45 +55,67 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_W = 512
+LANE = 128                      # VPU lane width: all block widths are 128-multiples
 
 MODE_TIDSET = 0
 MODE_TID_TO_DIFF = 1
 MODE_DIFFSET = 2
 
 
+def round_up_lanes(n: int) -> int:
+    """Smallest 128-multiple >= n (>= 128): the lane-aligned word width."""
+    return max((int(n) + LANE - 1) // LANE * LANE, LANE)
+
+
+def _resolve_block_w(w: int, block_w: int) -> int:
+    """Lane-align a requested tile width and cap it at the (lane-padded)
+    row width — a wider block than the row would only stream zeros."""
+    return min(round_up_lanes(block_w), round_up_lanes(w))
+
+
+def _intersect(a, b, mode):
+    if mode == MODE_TIDSET:
+        return jnp.bitwise_and(a, b)
+    if mode == MODE_TID_TO_DIFF:
+        return jnp.bitwise_and(a, jnp.bitwise_not(b))
+    return jnp.bitwise_and(b, jnp.bitwise_not(a))
+
+
+def _lane_popcount(inter) -> jax.Array:
+    """(1, bw) uint32 block -> (1, LANE) int32 per-lane popcount partials.
+    Pure VPU work: popcount, a sublane-folding reshape, and an add-reduce
+    that never crosses lanes."""
+    pc = jax.lax.population_count(inter).astype(jnp.int32)
+    return pc.reshape(-1, LANE).sum(axis=0, keepdims=True)
+
+
 def _kernel(idx_ref, supl_ref, msup_ref, a_ref, b_ref,
-            inter_ref, sup_ref, mask_ref, *, mode):
+            inter_ref, sup_ref, mask_ref, acc_ref, *, mode):
     q = pl.program_id(0)
     wj = pl.program_id(1)
     nw = pl.num_programs(1)
-    a = a_ref[...]
-    b = b_ref[...]
-    if mode == MODE_TIDSET:
-        inter = jnp.bitwise_and(a, b)
-    elif mode == MODE_TID_TO_DIFF:
-        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
-    else:
-        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    inter = _intersect(a_ref[...], b_ref[...], mode)
     inter_ref[...] = inter
-    partial = jax.lax.population_count(inter).astype(jnp.int32).sum()
+    lanes = _lane_popcount(inter)
 
     @pl.when(wj == 0)
     def _init():
-        sup_ref[0] = partial
+        acc_ref[...] = lanes
 
     @pl.when(wj != 0)
     def _acc():
-        sup_ref[0] = sup_ref[0] + partial
+        acc_ref[...] = acc_ref[...] + lanes
 
     @pl.when(wj == nw - 1)
     def _finish():
-        pop = sup_ref[0]
+        pop = acc_ref[...].sum()
         sup = pop if mode == MODE_TIDSET else supl_ref[q] - pop
         sup_ref[0] = sup
         mask_ref[0] = (sup >= msup_ref[0]).astype(jnp.int32)
 
 
-def _kernel_partial(idx_ref, a_ref, b_ref, inter_ref, pop_ref, *, mode):
+def _kernel_partial(idx_ref, a_ref, b_ref, inter_ref, pop_ref, acc_ref, *,
+                    mode):
     """Shard-local half of the fused kernel: intersect + accumulate popcount.
 
     No ``sup_left`` finishing and no min-support mask — on a word-sharded
@@ -78,24 +124,29 @@ def _kernel_partial(idx_ref, a_ref, b_ref, inter_ref, pop_ref, *, mode):
     (``repro.core.engine.TidShardedEngine``, DESIGN.md §7).
     """
     wj = pl.program_id(1)
-    a = a_ref[...]
-    b = b_ref[...]
-    if mode == MODE_TIDSET:
-        inter = jnp.bitwise_and(a, b)
-    elif mode == MODE_TID_TO_DIFF:
-        inter = jnp.bitwise_and(a, jnp.bitwise_not(b))
-    else:
-        inter = jnp.bitwise_and(b, jnp.bitwise_not(a))
+    nw = pl.num_programs(1)
+    inter = _intersect(a_ref[...], b_ref[...], mode)
     inter_ref[...] = inter
-    partial = jax.lax.population_count(inter).astype(jnp.int32).sum()
+    lanes = _lane_popcount(inter)
 
     @pl.when(wj == 0)
     def _init():
-        pop_ref[0] = partial
+        acc_ref[...] = lanes
 
     @pl.when(wj != 0)
     def _acc():
-        pop_ref[0] = pop_ref[0] + partial
+        acc_ref[...] = acc_ref[...] + lanes
+
+    @pl.when(wj == nw - 1)
+    def _finish():
+        pop_ref[0] = acc_ref[...].sum()
+
+
+def _pad_words(bitmaps: jax.Array, bw: int) -> jax.Array:
+    pad_w = (-bitmaps.shape[1]) % bw
+    if pad_w:
+        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad_w)))
+    return bitmaps
 
 
 @functools.partial(
@@ -123,10 +174,8 @@ def fused_intersect_partial_pairs(
         raise ValueError("left/right must share a (Q,) shape")
     qn = left.shape[0]
     w = bitmaps.shape[1]
-    bw = min(block_w, max(w, 1))
-    pad_w = (-w) % bw
-    if pad_w:
-        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad_w)))
+    bw = _resolve_block_w(w, block_w)
+    bitmaps = _pad_words(bitmaps, bw)
     wp = bitmaps.shape[1]
 
     idx = jnp.stack([left.astype(jnp.int32), right.astype(jnp.int32)])
@@ -142,6 +191,7 @@ def fused_intersect_partial_pairs(
             pl.BlockSpec((1, bw), lambda q, j, *_: (q, j)),
             pl.BlockSpec((1,), lambda q, j, *_: (q,)),
         ],
+        scratch_shapes=[pltpu.VMEM((1, LANE), jnp.int32)],
     )
     inter, pop = pl.pallas_call(
         functools.partial(_kernel_partial, mode=mode),
@@ -156,6 +206,55 @@ def fused_intersect_partial_pairs(
         interpret=interpret,
     )(idx, bitmaps, bitmaps)
     return inter[:, :w], pop
+
+
+def _fused_pairs_call(bitmaps, left, right, sup_left, min_sup, *, mode,
+                      block_w, interpret):
+    """Shared core of the fused kernel call: validate, lane-pad, launch.
+    Returns the *word-padded* intersection block plus (Q,) supports/mask —
+    the public wrappers slice (plain) or compact (``*_compact``) it."""
+    if bitmaps.ndim != 2:
+        raise ValueError(f"expected (P, W) frontier, got {bitmaps.shape}")
+    if left.shape != right.shape or left.shape != sup_left.shape:
+        raise ValueError("left/right/sup_left must share a (Q,) shape")
+    qn = left.shape[0]
+    w = bitmaps.shape[1]
+    bw = _resolve_block_w(w, block_w)
+    bitmaps = _pad_words(bitmaps, bw)
+    wp = bitmaps.shape[1]
+
+    idx = jnp.stack([left.astype(jnp.int32), right.astype(jnp.int32)])
+    supl = sup_left.astype(jnp.int32)
+    msup = jnp.asarray(min_sup, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(qn, wp // bw),
+        in_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[0, q], j)),
+            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[1, q], j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bw), lambda q, j, *_: (q, j)),
+            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
+            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, LANE), jnp.int32)],
+    )
+    inter, sup, mask = pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, wp), jnp.uint32),
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+            jax.ShapeDtypeStruct((qn,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ) if not interpret else None,
+        interpret=interpret,
+    )(idx, supl, msup, bitmaps, bitmaps)
+    return inter, sup, mask, w
 
 
 @functools.partial(
@@ -180,46 +279,59 @@ def fused_intersect_pairs(
     W need not be a multiple of ``block_w``; the frontier is zero-padded
     (zero words contribute zero popcount).
     """
-    if bitmaps.ndim != 2:
-        raise ValueError(f"expected (P, W) frontier, got {bitmaps.shape}")
-    if left.shape != right.shape or left.shape != sup_left.shape:
-        raise ValueError("left/right/sup_left must share a (Q,) shape")
-    qn = left.shape[0]
-    p, w = bitmaps.shape
-    bw = min(block_w, max(w, 1))
-    pad_w = (-w) % bw
-    if pad_w:
-        bitmaps = jnp.pad(bitmaps, ((0, 0), (0, pad_w)))
-    wp = bitmaps.shape[1]
-
-    idx = jnp.stack([left.astype(jnp.int32), right.astype(jnp.int32)])
-    supl = sup_left.astype(jnp.int32)
-    msup = jnp.asarray(min_sup, jnp.int32).reshape(1)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(qn, wp // bw),
-        in_specs=[
-            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[0, q], j)),
-            pl.BlockSpec((1, bw), lambda q, j, idx_ref, supl_ref, msup_ref: (idx_ref[1, q], j)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, bw), lambda q, j, *_: (q, j)),
-            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
-            pl.BlockSpec((1,), lambda q, j, *_: (q,)),
-        ],
-    )
-    inter, sup, mask = pl.pallas_call(
-        functools.partial(_kernel, mode=mode),
-        grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((qn, wp), jnp.uint32),
-            jax.ShapeDtypeStruct((qn,), jnp.int32),
-            jax.ShapeDtypeStruct((qn,), jnp.int32),
-        ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ) if not interpret else None,
-        interpret=interpret,
-    )(idx, supl, msup, bitmaps, bitmaps)
+    inter, sup, mask, w = _fused_pairs_call(
+        bitmaps, left, right, sup_left, min_sup,
+        mode=mode, block_w=block_w, interpret=interpret)
     return inter[:, :w], sup, mask
+
+
+def compact_epilogue(inter: jax.Array, sup: jax.Array, mask: jax.Array,
+                     n_valid: jax.Array | int):
+    """Fold the min-sup mask + a prefix-sum survivor scatter into the fused
+    executable: ``(Q, Wp)`` intersections + ``(Q,)`` mask -> ``(Q, Wp)``
+    block whose rows ``[:S]`` are the survivors in ascending pair order
+    (rows ``[S:]`` duplicate row 0 — the engine's rung-padding convention)
+    plus the survivor count ``S``.
+
+    ``n_valid`` masks out the bucket-ladder pad pairs (a padded ``(0, 0)``
+    self-pair can clear any threshold), traced so the valid count never
+    recompiles.  ``jnp.nonzero(size=Q)`` *is* the prefix-sum scatter:
+    XLA lowers it to cumsum + scatter with a static output shape, so the
+    whole mask->compact path stays inside one dispatch and the full block
+    never needs a host round-trip before compaction.
+    """
+    q = mask.shape[0]
+    valid = jnp.arange(q, dtype=jnp.int32) < jnp.asarray(n_valid, jnp.int32)
+    m = (mask != 0) & valid
+    sel = jnp.nonzero(m, size=q, fill_value=0)[0]
+    compact = jnp.take(inter, sel, axis=0)
+    return compact, sup, m.astype(jnp.int32), m.sum(dtype=jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_w", "interpret")
+)
+def fused_intersect_compact_pairs(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup: jax.Array | int,
+    n_valid: jax.Array | int,
+    *,
+    mode: int = MODE_TIDSET,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = False,
+):
+    """:func:`fused_intersect_pairs` with in-executable survivor compaction:
+    one dispatch returns ``(compact (Q, W), sup (Q,), mask (Q,), n_surv)``
+    where ``compact[:n_surv]`` are the surviving intersections in ascending
+    pair order.  Pairs at positions >= ``n_valid`` are bucket padding and
+    never survive.  The engine reads the mask once and slices the compacted
+    block to its survivor rung — no second gather dispatch, no index upload
+    (DESIGN.md §3)."""
+    inter, sup, mask, w = _fused_pairs_call(
+        bitmaps, left, right, sup_left, min_sup,
+        mode=mode, block_w=block_w, interpret=interpret)
+    compact, sup, mask, n_surv = compact_epilogue(inter, sup, mask, n_valid)
+    return compact[:, :w], sup, mask, n_surv

@@ -3,18 +3,36 @@
 ``repro.core.engine`` routes the pallas backend's pair batches through here,
 so the hot loop is kernel-backed on real hardware while staying exact (and a
 single fused XLA computation) on the CPU host used for tests/benchmarks.
+
+``block_w`` resolution: ``None`` (the default everywhere above this layer)
+consults the autotuned shape->config table (``repro.kernels.autotune``) at
+trace time, so tuned tile widths reach every call site — including the
+shard_map-wrapped partial kernels, whose bodies trace through here — without
+threading a width through every driver.  An explicit ``block_w`` (config /
+CLI override) wins over the table.
 """
 from __future__ import annotations
 
 import jax
 
-from .fused_intersect import (fused_intersect_pairs,
+from .fused_intersect import (DEFAULT_BLOCK_W, fused_intersect_compact_pairs,
+                              fused_intersect_pairs,
                               fused_intersect_partial_pairs)
-from .ref import fused_intersect_partial_ref, fused_intersect_ref
+from .ref import (fused_intersect_compact_ref, fused_intersect_partial_ref,
+                  fused_intersect_ref)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_block_w(block_w, q: int, w: int, mode: int) -> int:
+    """Explicit width if given, else the autotuned (or cost-model-seeded)
+    width for this call's shape class."""
+    if block_w is not None:
+        return int(block_w)
+    from .. import autotune
+    return autotune.lookup(q, w, mode).block_w
 
 
 def fused_intersect_partial(
@@ -23,17 +41,19 @@ def fused_intersect_partial(
     right: jax.Array,
     *,
     mode: int,
+    block_w: int | None = None,
     interpret: bool | None = None,
 ):
     """Shard-local fused gather+AND+popcount (no threshold); see the partial
     kernel docstring.  Dispatch mirrors :func:`fused_intersect`."""
+    bw = resolve_block_w(block_w, left.shape[0], bitmaps.shape[1], mode)
     if interpret is None:
         if _on_tpu():
             return fused_intersect_partial_pairs(bitmaps, left, right,
-                                                 mode=mode)
+                                                 mode=mode, block_w=bw)
         return fused_intersect_partial_ref(bitmaps, left, right, mode=mode)
     return fused_intersect_partial_pairs(bitmaps, left, right, mode=mode,
-                                         interpret=interpret)
+                                         block_w=bw, interpret=interpret)
 
 
 def fused_intersect(
@@ -44,14 +64,46 @@ def fused_intersect(
     min_sup,
     *,
     mode: int,
+    block_w: int | None = None,
     interpret: bool | None = None,
 ):
     """Fused gather+AND+popcount+mask.  See kernel docstring for tiling."""
+    bw = resolve_block_w(block_w, left.shape[0], bitmaps.shape[1], mode)
     if interpret is None:
         if _on_tpu():
             return fused_intersect_pairs(bitmaps, left, right, sup_left,
-                                         min_sup, mode=mode)
+                                         min_sup, mode=mode, block_w=bw)
         return fused_intersect_ref(bitmaps, left, right, sup_left,
                                    min_sup, mode=mode)
     return fused_intersect_pairs(bitmaps, left, right, sup_left, min_sup,
-                                 mode=mode, interpret=interpret)
+                                 mode=mode, block_w=bw, interpret=interpret)
+
+
+def fused_intersect_compact(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup,
+    n_valid,
+    *,
+    mode: int,
+    block_w: int | None = None,
+    interpret: bool | None = None,
+):
+    """Fused gather+AND+popcount+mask with the survivor-compaction epilogue
+    in the same executable: returns ``(compact, sup, mask, n_surv)`` —
+    ``compact[:n_surv]`` are the surviving rows in ascending pair order
+    (pairs >= ``n_valid`` are bucket padding and excluded).  Dispatch
+    mirrors :func:`fused_intersect`."""
+    bw = resolve_block_w(block_w, left.shape[0], bitmaps.shape[1], mode)
+    if interpret is None:
+        if _on_tpu():
+            return fused_intersect_compact_pairs(
+                bitmaps, left, right, sup_left, min_sup, n_valid,
+                mode=mode, block_w=bw)
+        return fused_intersect_compact_ref(bitmaps, left, right, sup_left,
+                                           min_sup, n_valid, mode=mode)
+    return fused_intersect_compact_pairs(
+        bitmaps, left, right, sup_left, min_sup, n_valid,
+        mode=mode, block_w=bw, interpret=interpret)

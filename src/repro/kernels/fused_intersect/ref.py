@@ -12,7 +12,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .fused_intersect import MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET
+from .fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF, MODE_TIDSET,
+                              compact_epilogue)
 
 
 @functools.partial(jax.jit, static_argnames=("mode",))
@@ -68,3 +69,26 @@ def fused_intersect_ref(
     sup = pop if mode == MODE_TIDSET else sup_left.astype(jnp.int32) - pop
     mask = (sup >= jnp.asarray(min_sup, jnp.int32)).astype(jnp.int32)
     return inter, sup, mask
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def fused_intersect_compact_ref(
+    bitmaps: jax.Array,
+    left: jax.Array,
+    right: jax.Array,
+    sup_left: jax.Array,
+    min_sup: jax.Array | int,
+    n_valid: jax.Array | int,
+    *,
+    mode: int = MODE_TIDSET,
+):
+    """Oracle for the compacting variant: the fused intersect/threshold pass
+    plus the same prefix-sum survivor compaction epilogue
+    (:func:`..fused_intersect.compact_epilogue`) in one jit — returns
+    ``(compact (Q, W), sup (Q,), mask (Q,), n_surv)`` with survivors in
+    ascending pair order and pad rows duplicating row 0.  This is also the
+    production path on non-TPU backends: one fused XLA executable instead
+    of intersect-dispatch -> host mask -> gather-dispatch."""
+    inter, sup, mask = fused_intersect_ref(bitmaps, left, right, sup_left,
+                                           min_sup, mode=mode)
+    return compact_epilogue(inter, sup, mask, n_valid)

@@ -248,8 +248,17 @@ def test_pair_buffers_ladder_reuse():
     qb3, l3, _, _ = bufs.fill(np.zeros(20, np.int32),
                               np.zeros(20, np.int32),
                               np.zeros(20, np.int32))
-    assert qb3 == 32 and l3.shape == (32,) and l3 is not l1
+    assert qb3 == 24 and l3.shape == (24,) and l3 is not l1
 
 
 def test_bucket_size_ladder():
-    assert [eng.bucket_size(n, 8) for n in (0, 1, 8, 9, 100)] == [8, 8, 8, 16, 128]
+    # half-pow2 ladder: floor * {1, 1.5, 2, 3, 4, 6, 8, ...}
+    assert [eng.bucket_size(n, 8) for n in (0, 1, 8, 9, 12, 13, 100)] \
+        == [8, 8, 8, 12, 12, 16, 128]
+    assert [eng.bucket_size(n, 1024) for n in (1, 1025, 1537, 3073)] \
+        == [1024, 1536, 2048, 4096]
+    # every pair rung (floor f) is also a rung of the finer survivor ladder
+    # (floor f/8), so fused-epilogue compaction slices never exceed the block
+    for n in (1, 7, 9, 100, 1000, 5000):
+        qb = eng.bucket_size(n, 1024)
+        assert eng.bucket_size(n, 128) <= qb
