@@ -18,6 +18,8 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                        work/memory vs the 1D modes -> BENCH_gridscale.json
   kerneltune           autotune sweep + tuned-vs-default (checksum-gated)
                        + measured backend crossover -> BENCH_kerneltune.json
+  recovery             restore-and-resume vs re-mine-from-scratch + live
+                       re-meshing, checksum-gated -> BENCH_recovery.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
@@ -41,6 +43,7 @@ from benchmarks.gridscale_bench import gridscale_bench
 from benchmarks.headline_bench import headline_bench
 from benchmarks.kerneltune_bench import kerneltune_bench
 from benchmarks.micro import kernel_microbench, moe_balance
+from benchmarks.recovery_bench import recovery_bench
 from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
 
@@ -56,6 +59,7 @@ TABLES = {
     "shardscale": shardscale_bench,
     "gridscale": gridscale_bench,
     "kerneltune": kerneltune_bench,
+    "recovery": recovery_bench,
     "moe_balance": moe_balance,
 }
 
@@ -75,6 +79,7 @@ def main() -> None:
         "shardscale": functools.partial(shardscale_bench, smoke=True),
         "gridscale": functools.partial(gridscale_bench, smoke=True),
         "kerneltune": functools.partial(kerneltune_bench, smoke=True),
+        "recovery": functools.partial(recovery_bench, smoke=True),
     } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
     failures = []

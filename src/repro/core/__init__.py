@@ -12,11 +12,12 @@ Public surface:
   generate_rules                        ARM step 2
 """
 from .apriori import AprioriResult, apriori_mine
-from .eclat import VARIANTS, EclatConfig, EclatResult, mine
-from .engine import (Engine, LevelResult, available_backends, make_engine,
-                     register_backend)
+from .eclat import VARIANTS, EclatConfig, EclatResult, mine, resume_mine
+from .engine import (Engine, EngineState, LevelResult, available_backends,
+                     engine_from_state, make_engine, register_backend)
 from .itemsets import ItemsetStore, LevelRecord, generate_rules
-from .lineage import load_mining_checkpoint, recover_partition, save_mining_checkpoint
+from .lineage import (latest_mining_checkpoint, load_mining_checkpoint,
+                      recover_partition, save_mining_checkpoint)
 from .oracle import bruteforce_fim
 from .postfilter import (WORKLOAD_MODES, TopKResult, closed_itemsets,
                          filter_mode, frequent_from_closed, maximal_itemsets,
@@ -35,11 +36,12 @@ from .accumulator import HostAccumulator, build_vertical_accumulated
 
 __all__ = [
     "AprioriResult", "apriori_mine",
-    "VARIANTS", "EclatConfig", "EclatResult", "mine",
-    "Engine", "LevelResult", "available_backends", "make_engine",
-    "register_backend",
+    "VARIANTS", "EclatConfig", "EclatResult", "mine", "resume_mine",
+    "Engine", "EngineState", "LevelResult", "available_backends",
+    "engine_from_state", "make_engine", "register_backend",
     "ItemsetStore", "LevelRecord", "generate_rules",
-    "load_mining_checkpoint", "recover_partition", "save_mining_checkpoint",
+    "latest_mining_checkpoint", "load_mining_checkpoint",
+    "recover_partition", "save_mining_checkpoint",
     "bruteforce_fim",
     "WORKLOAD_MODES", "TopKResult", "closed_itemsets", "filter_mode",
     "frequent_from_closed", "maximal_itemsets", "top_k_mine",

@@ -39,8 +39,8 @@ from .partitioners import assign_partitions, partition_stats
 from .triangular import cooccurrence_counts, frequent_pairs
 from .vertical import VerticalDB, build_vertical, filter_transactions, filtering_reduction
 
-__all__ = ["EclatConfig", "EclatResult", "mine", "resolve_min_sup",
-           "run_bottom_up", "VARIANTS"]
+__all__ = ["EclatConfig", "EclatResult", "mine", "resume_mine",
+           "resolve_min_sup", "run_bottom_up", "VARIANTS"]
 
 VARIANTS: Dict[str, dict] = {
     "v1": dict(filter_txns=False, accumulator=False, partitioner="default"),
@@ -112,7 +112,7 @@ class EclatConfig:
 @dataclasses.dataclass
 class EclatResult:
     store: ItemsetStore
-    db: VerticalDB
+    db: Optional[VerticalDB]            # None when resumed from a checkpoint
     stats: dict
     mode: str = "all"                   # the workload mode this run mined for
 
@@ -401,12 +401,18 @@ def mine(
     on_level = None
     if config.checkpoint_dir and config.checkpoint_every_level:
         from .lineage import save_mining_checkpoint
+        # resume metadata: everything resume_mine needs that is not derivable
+        # from the frontier arrays themselves (DESIGN.md §10)
+        ckpt_meta = {"abs_min_sup": int(abs_min_sup), "engine_mode": int(mode_k),
+                     "max_k": int(max_k), "eff_p": int(eff_p),
+                     "use_diffsets": bool(diffsets)}
 
         def on_level(k, class_id, item_rank, partition, support, lvl_bitmaps):
             # slice the rung padding off on device before the host transfer
             save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
                                    item_rank, partition, support,
-                                   np.asarray(lvl_bitmaps[: support.shape[0]]))
+                                   np.asarray(lvl_bitmaps[: support.shape[0]]),
+                                   meta=ckpt_meta)
 
     run_bottom_up(execu, store, lvl_bitmaps, class_id, item_rank, partition,
                   support, abs_min_sup=abs_min_sup, mode=mode_k,
@@ -416,3 +422,73 @@ def mine(
 
     stats.update(execu.stats())
     return _finish(store, db, stats, config, t_start)
+
+
+def resume_mine(
+    config: EclatConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+) -> EclatResult:
+    """Continue a batch mine from its deepest per-level checkpoint.
+
+    Reads the newest ``mining_ckpt_k*.npz`` under ``config.checkpoint_dir``
+    (written by ``mine()`` with ``checkpoint_every_level=True``), rebuilds
+    the store and frontier, and resumes ``run_bottom_up`` from the
+    checkpointed level.  The engine is resolved fresh from *this* process's
+    ``config.backend`` / ``config.shard`` / ``mesh`` — restore onto fewer
+    devices, a different grid factorization, or a single device, and the
+    frontier is re-placed by ``prepare_frontier`` under the new specs
+    (DESIGN.md §10): the remaining levels come out bit-exact because every
+    backend is bit-exact on the same frontier.  The original transactions
+    are not needed; ``EclatResult.db`` is ``None`` on a resumed run.
+    """
+    from .lineage import (latest_mining_checkpoint, load_mining_checkpoint,
+                          save_mining_checkpoint)
+
+    if not config.checkpoint_dir:
+        raise ValueError("resume_mine needs config.checkpoint_dir")
+    t_start = time.perf_counter()
+    path = latest_mining_checkpoint(config.checkpoint_dir)
+    store, fr = load_mining_checkpoint(path)
+    meta = fr.get("meta") or {}
+    if "abs_min_sup" not in meta:
+        raise ValueError(
+            f"{path} predates resume metadata — re-run the original mine "
+            f"with this version to write a resumable checkpoint")
+    abs_min_sup = int(meta["abs_min_sup"])
+    mode_k = int(meta["engine_mode"])
+    max_k = int(meta["max_k"])
+    eff_p = int(meta["eff_p"])
+    stats: dict = {"variant": config.variant, "phase_s": {},
+                   "abs_min_sup": abs_min_sup,
+                   "resumed_from": path, "resume_k": int(fr["k"])}
+
+    execu = eng.resolve_engine(config.backend, mesh,
+                               bucket_min=config.bucket_min,
+                               shard=config.shard,
+                               block_w=config.block_w,
+                               autotune=config.autotune,
+                               compact=config.compact)
+    stats["backend"] = execu.name
+    stats["backend_requested"] = config.backend
+    part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
+    lvl_bitmaps = execu.prepare_frontier(jnp.asarray(fr["bitmaps"]))
+
+    on_level = None
+    if config.checkpoint_every_level:
+        def on_level(k, class_id, item_rank, partition, support, lvl_bitmaps):
+            save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
+                                   item_rank, partition, support,
+                                   np.asarray(lvl_bitmaps[: support.shape[0]]),
+                                   meta=meta)
+
+    t0 = time.perf_counter()
+    run_bottom_up(execu, store, lvl_bitmaps,
+                  class_id=np.asarray(fr["class_id"]),
+                  item_rank=np.asarray(fr["item_rank"]),
+                  partition=np.asarray(fr["partition"]),
+                  support=np.asarray(fr["support"]).astype(np.int64),
+                  abs_min_sup=abs_min_sup, mode=mode_k, max_k=max_k,
+                  part_to_dev=part_to_dev, on_level=on_level)
+    stats["phase_s"]["bottom_up"] = time.perf_counter() - t0
+    stats.update(execu.stats())
+    return _finish(store, None, stats, config, t_start)

@@ -71,8 +71,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..dist.compat import shard_map, shard_map_unchecked
-from ..dist.sharding import (grid_block_spec, grid_pair_spec, shard_words,
-                             word_shard_spec)
+from ..dist.sharding import (grid_block_spec, grid_pair_spec, mesh_descriptor,
+                             shard_words, word_shard_spec)
 from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
                                        MODE_TIDSET, compact_epilogue,
                                        fused_intersect,
@@ -84,9 +84,10 @@ from ..kernels.fused_intersect import (MODE_DIFFSET, MODE_TID_TO_DIFF,
 
 __all__ = [
     "MODE_TIDSET", "MODE_TID_TO_DIFF", "MODE_DIFFSET",
-    "LevelResult", "Engine", "JnpEngine", "PallasEngine", "ShardedEngine",
-    "TidShardedEngine", "GridShardedEngine", "group_pairs_by_device",
-    "register_backend", "available_backends", "make_engine", "resolve_engine",
+    "LevelResult", "Engine", "EngineState", "JnpEngine", "PallasEngine",
+    "ShardedEngine", "TidShardedEngine", "GridShardedEngine",
+    "group_pairs_by_device", "register_backend", "available_backends",
+    "make_engine", "engine_from_state", "resolve_engine",
     "DispatchPolicy", "KERNELTUNE_ENV",
 ]
 
@@ -114,6 +115,73 @@ class LevelResult:
     mask: np.ndarray
     supports: np.ndarray
     bitmaps: jax.Array
+
+
+@dataclasses.dataclass
+class EngineState:
+    """Serializable engine state (DESIGN.md §10): config + accounting as
+    *data*, never Python object innards.
+
+    What is data: the knobs a rebuild needs (backend / inner executor /
+    ladder floors / kernel config) and the accounting ledgers that must
+    survive a crash so per-slide ``stats(since=...)`` deltas stay truthful
+    after recovery.  What is derived (and therefore absent): pair buffers,
+    compiled shard_map executors, shardings, autotune tables — all
+    reconstructed by :func:`engine_from_state` under whatever mesh the
+    restoring process brings.  ``mesh`` is the provenance descriptor of the
+    mesh the snapshot ran on; it is reported, never restored from.
+    """
+    backend: str
+    inner: str
+    bucket_min: int
+    compact_min: int
+    block_w: Optional[int]
+    compact: bool
+    autotune: bool
+    interpret: Optional[bool]
+    mesh: Optional[dict]                      # mesh_descriptor provenance
+    n_intersections: int
+    n_padded: int
+    level_padding: List[Tuple[int, int]]
+    device_pair_counts: List[np.ndarray]
+
+    def to_tree(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """(array tree, JSON-able extra) for ``training.checkpoint``."""
+        tree: Dict[str, np.ndarray] = {
+            "level_padding": np.asarray(self.level_padding,
+                                        np.int64).reshape(-1, 2),
+        }
+        if self.device_pair_counts:
+            tree["device_pair_counts"] = np.stack(
+                [np.asarray(c, np.int64) for c in self.device_pair_counts])
+        extra = {"backend": self.backend, "inner": self.inner,
+                 "bucket_min": int(self.bucket_min),
+                 "compact_min": int(self.compact_min),
+                 "block_w": None if self.block_w is None else int(self.block_w),
+                 "compact": bool(self.compact),
+                 "autotune": bool(self.autotune),
+                 "interpret": self.interpret, "mesh": self.mesh,
+                 "n_intersections": int(self.n_intersections),
+                 "n_padded": int(self.n_padded)}
+        return tree, extra
+
+    @classmethod
+    def from_tree(cls, tree: Dict[str, np.ndarray], extra: dict) -> "EngineState":
+        lp = np.asarray(tree["level_padding"], np.int64).reshape(-1, 2)
+        dpc = tree.get("device_pair_counts")
+        return cls(
+            backend=str(extra["backend"]), inner=str(extra["inner"]),
+            bucket_min=int(extra["bucket_min"]),
+            compact_min=int(extra["compact_min"]),
+            block_w=(None if extra["block_w"] is None
+                     else int(extra["block_w"])),
+            compact=bool(extra["compact"]), autotune=bool(extra["autotune"]),
+            interpret=extra["interpret"], mesh=extra["mesh"],
+            n_intersections=int(extra["n_intersections"]),
+            n_padded=int(extra["n_padded"]),
+            level_padding=[(int(a), int(b)) for a, b in lp],
+            device_pair_counts=([np.asarray(c, np.int64) for c in dpc]
+                                if dpc is not None else []))
 
 
 def bucket_size(n: int, floor: int) -> int:
@@ -267,6 +335,45 @@ def make_engine(
         return PallasEngine(bucket_min=bucket_min, interpret=interpret,
                             **kcfg)
     return cls(bucket_min=bucket_min, **kcfg)
+
+
+_UNSET = object()
+
+
+def engine_from_state(
+    state: EngineState,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    *,
+    backend: Optional[str] = None,
+    interpret=_UNSET,
+) -> "Engine":
+    """Rebuild an engine from an :class:`EngineState`, possibly on a
+    different mesh — the engine half of live re-meshing (DESIGN.md §10).
+
+    The snapshot's mesh descriptor is provenance only: the rebuilt engine is
+    constructed against ``mesh`` (whatever factorization the restoring
+    process brings), so a ``tidsharded`` state taken on 4 devices restores
+    onto a 2-device mesh, a ``grid`` state taken on 2x2 onto 4x1, and any
+    mesh-mapped state onto a single device (``mesh=None`` falls back to the
+    snapshot's inner executor).  ``backend`` overrides the target backend
+    outright (cross-family re-meshing, e.g. ``sharded`` -> ``tidsharded``);
+    ``interpret`` overrides the kernel-interpreter flag (tests).
+    """
+    target = state.backend if backend is None else backend
+    mesh_backends = ("sharded", "tidsharded", "grid")
+    if target in mesh_backends and mesh is None:
+        target = state.inner if state.inner in ("jnp", "pallas") else "pallas"
+    interp = state.interpret if interpret is _UNSET else interpret
+    eng = make_engine(target,
+                      mesh=mesh if target in mesh_backends else None,
+                      bucket_min=state.bucket_min,
+                      interpret=interp,
+                      inner=state.inner,
+                      block_w=state.block_w,
+                      compact=state.compact,
+                      autotune=state.autotune)
+    eng.compact_min = int(state.compact_min)
+    return eng.restore_state(state)
 
 
 # ---------------------------------------------------------------------------
@@ -538,6 +645,44 @@ class Engine:
         placement."""
         return bitmaps
 
+    def snapshot_state(self) -> EngineState:
+        """Serializable snapshot of config + accounting (DESIGN.md §10).
+        Deep-copies the ledgers so the snapshot is stable while the engine
+        keeps expanding."""
+        return EngineState(
+            backend=self.name,
+            inner=getattr(self, "inner",
+                          self.name if self.name in ("jnp", "pallas")
+                          else "pallas"),
+            bucket_min=self.buffers.floor,
+            compact_min=self.compact_min,
+            block_w=self.block_w,
+            compact=self.compact,
+            autotune=self.autotune,
+            interpret=getattr(self, "interpret", None),
+            mesh=mesh_descriptor(getattr(self, "mesh", None)),
+            n_intersections=self.n_intersections,
+            n_padded=self.n_padded,
+            level_padding=[(int(a), int(b)) for a, b in self.level_padding],
+            device_pair_counts=[np.asarray(c, np.int64).copy()
+                                for c in self.device_pair_counts])
+
+    def restore_state(self, state: EngineState) -> "Engine":
+        """Adopt a snapshot's accounting.  Per-device pair counts are kept
+        only when this engine's pair axis has the same width as the
+        snapshot's — restoring onto a different mesh factorization makes the
+        old per-device attribution meaningless, so it is dropped (derived
+        accounting, not data; DESIGN.md §10)."""
+        self.n_intersections = int(state.n_intersections)
+        self.n_padded = int(state.n_padded)
+        self.level_padding = [(int(a), int(b)) for a, b in state.level_padding]
+        dpc = [np.asarray(c, np.int64).copy()
+               for c in state.device_pair_counts]
+        if any(c.shape[0] != self.n_devices for c in dpc):
+            dpc = []
+        self.device_pair_counts = dpc
+        return self
+
     def snapshot(self) -> Tuple[int, int, int, int]:
         """Counter snapshot, for per-call deltas on a long-lived engine
         (``stats(since=snapshot)`` — the streaming miner reports per-slide
@@ -691,6 +836,7 @@ class ShardedEngine(Engine):
         self.mesh = mesh
         self.axis = axis
         self.inner = inner
+        self.interpret = interpret
         self.n_devices = int(mesh.shape[axis])
         if inner not in ("jnp", "pallas"):
             raise ValueError(f"unknown inner executor {inner!r}")
@@ -906,6 +1052,7 @@ class TidShardedEngine(_WordShardedFrontierMixin, Engine):
         super().__init__(bucket_min, block_w=block_w, compact=compact,
                          autotune=autotune, compact_min=compact_min)
         self.inner = inner
+        self.interpret = interpret
         self._init_word_axis(mesh, axis)
         # pairs are never distributed in this mode: partition->device routing
         # (device_of_pair) is meaningless and ignored, so advertise a single
@@ -1004,6 +1151,7 @@ class GridShardedEngine(_WordShardedFrontierMixin, Engine):
                 f"{tuple(mesh.axis_names)}")
         self.class_axis = class_axis
         self.inner = inner
+        self.interpret = interpret
         self._init_word_axis(mesh, data_axis)
         self.n_class = int(mesh.shape[class_axis])
         # drivers route partition->device over the pair (class) axis

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import tempfile
 from typing import Dict, List, Optional, Tuple
 
@@ -26,6 +27,7 @@ __all__ = [
     "recover_partition",
     "save_mining_checkpoint",
     "load_mining_checkpoint",
+    "latest_mining_checkpoint",
 ]
 
 
@@ -99,8 +101,14 @@ def save_mining_checkpoint(
     partition: np.ndarray,
     support: np.ndarray,
     bitmaps: np.ndarray,
+    meta: Optional[dict] = None,
 ) -> str:
-    """Atomic snapshot: levels found so far + live frontier at level ``k``."""
+    """Atomic snapshot: levels found so far + live frontier at level ``k``.
+
+    ``meta`` (JSON-able) records what a blind resume needs — the resolved
+    ``abs_min_sup``, engine mode, ``max_k`` and partition count — so
+    :func:`repro.core.eclat.resume_mine` can continue the run without the
+    original transactions (DESIGN.md §10)."""
     os.makedirs(directory, exist_ok=True)
     payload = {
         "k": np.asarray(k),
@@ -111,6 +119,7 @@ def save_mining_checkpoint(
         "bitmaps": bitmaps,
         "item_ids": store._item_ids,
         "n_levels": np.asarray(len(store.levels)),
+        "meta": np.asarray(json.dumps(meta or {})),
     }
     for i, lvl in enumerate(store.levels):
         payload[f"lvl{i}_parent"] = lvl.parent
@@ -147,5 +156,23 @@ def load_mining_checkpoint(path: str):
         partition=z["partition"],
         support=z["support"],
         bitmaps=z["bitmaps"],
+        meta=(json.loads(str(z["meta"])) if "meta" in z.files else {}),
     )
     return store, frontier
+
+
+def latest_mining_checkpoint(directory: str) -> str:
+    """The deepest ``mining_ckpt_k*.npz`` in ``directory`` (the per-level
+    checkpoints are cumulative: the deepest one carries every found level
+    plus the live frontier)."""
+    best, best_k = None, -1
+    if os.path.isdir(directory):
+        for name in os.listdir(directory):
+            m = re.fullmatch(r"mining_ckpt_k(\d+)\.npz", name)
+            if m and int(m.group(1)) > best_k:
+                best_k = int(m.group(1))
+                best = os.path.join(directory, name)
+    if best is None:
+        raise FileNotFoundError(
+            f"no mining checkpoint (mining_ckpt_k*.npz) under {directory!r}")
+    return best

@@ -30,7 +30,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 __all__ = ["set_mesh", "get_mesh", "reset_mesh", "dp_axes", "constrain",
            "param_spec", "batch_spec", "spec_tree", "sharding_tree",
            "word_shard_spec", "padded_word_count", "shard_words",
-           "grid_pair_spec", "grid_block_spec"]
+           "grid_pair_spec", "grid_block_spec", "mesh_descriptor"]
 
 # axis names that count as gradient-reduction ("data-parallel") axes
 DP_AXIS_NAMES = ("pod", "data")
@@ -70,6 +70,20 @@ def get_mesh():
 def reset_mesh() -> None:
     """Clear the registry (tests; single-device paths)."""
     set_mesh(None)
+
+
+def mesh_descriptor(mesh) -> Optional[dict]:
+    """Logical description of a mesh — ``{"axes": [...], "shape": [...]}`` —
+    for checkpoint provenance (DESIGN.md §10).  Device placement is never
+    restored *from* this: a checkpoint re-places its logical arrays under
+    whatever mesh the restoring process brings (that is what makes live
+    re-meshing work); the descriptor only records where the state ran so
+    tools and benches can report 4->2 / 2x2->4x1 transitions.
+    """
+    if mesh is None or getattr(mesh, "empty", False):
+        return None
+    axes = [str(a) for a in mesh.axis_names]
+    return {"axes": axes, "shape": [int(mesh.shape[a]) for a in axes]}
 
 
 # ---------------------------------------------------------------------------

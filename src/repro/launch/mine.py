@@ -14,7 +14,7 @@ import argparse
 import os
 import time
 
-from ..core import EclatConfig, generate_rules, mine, top_k_mine
+from ..core import EclatConfig, generate_rules, mine, resume_mine, top_k_mine
 from ..data import PAPER_DATASETS, generate, load_fimi
 
 
@@ -61,6 +61,12 @@ def main(argv=None):
                          "before dispatching them (winners persist in the "
                          "autotune cache)")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--restore", action="store_true",
+                    help="resume the deepest mining checkpoint in "
+                         "--checkpoint-dir instead of mining from scratch; "
+                         "--backend/--shard/--grid select the *restoring* "
+                         "mesh, which may differ from the original run's "
+                         "(live re-meshing, DESIGN.md §10)")
     ap.add_argument("--min-conf", type=float, default=0.0,
                     help="if >0, also generate association rules")
     args = ap.parse_args(argv)
@@ -85,6 +91,20 @@ def main(argv=None):
                       checkpoint_every_level=args.checkpoint_dir is not None)
     from .mesh import mesh_for_mining
     mesh = mesh_for_mining(args.backend, args.shard, args.grid)
+
+    if args.restore:
+        if not args.checkpoint_dir:
+            ap.error("--restore requires --checkpoint-dir")
+        t0 = time.perf_counter()
+        res = resume_mine(cfg, mesh=mesh)
+        dt = time.perf_counter() - t0
+        print(f"[mine] resumed {res.stats['resumed_from']} at level "
+              f"{res.stats['resume_k']} ({res.stats['backend']}): "
+              f"{res.total} itemsets in {dt:.2f}s levels={res.counts}")
+        if args.min_conf > 0:
+            rules = generate_rules(res.support_map(), args.min_conf)
+            print(f"[mine] {len(rules)} rules at conf>={args.min_conf}")
+        return
 
     if args.top_k is not None:
         t0 = time.perf_counter()

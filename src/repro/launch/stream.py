@@ -7,14 +7,24 @@
 Each slide prints the re-mine latency, window occupancy, class churn
 (equivalence classes entering/leaving the active set), and the live top-k;
 ``--min-conf`` adds the rule count of the current window.
+
+Recovery (DESIGN.md §10): ``--checkpoint-dir`` writes an async miner
+snapshot every ``--checkpoint-every`` slides; after a crash, rerun with
+``--restore`` (same ``--dataset``/``--seed``/``--drift-every`` — the stream
+is deterministic, so completed slides are skipped and the rest replayed).
+``--remesh`` restores under *this* invocation's ``--backend``/``--shard``/
+``--grid`` and visible devices instead of the checkpoint's recorded config —
+live re-meshing, bit-exact either way.
 """
 from __future__ import annotations
 
 import argparse
 
 from ..data import PAPER_DATASETS, stream_spec, transaction_stream
+from ..faults import InjectedFault, clear_kill_hook, set_kill_hook
 from ..serving import StreamQueryService
-from ..streaming import StreamConfig, StreamingMiner
+from ..streaming import (StreamCheckpointer, StreamConfig, StreamingMiner,
+                         peek_config, restore_miner)
 
 
 def main(argv=None):
@@ -54,20 +64,63 @@ def main(argv=None):
     ap.add_argument("--min-conf", type=float, default=0.0,
                     help="if >0, also report association rules per slide")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="write an async miner snapshot (MinerState, "
+                         "DESIGN.md §10) every --checkpoint-every slides")
+    ap.add_argument("--checkpoint-every", type=int, default=1, metavar="N",
+                    help="checkpoint cadence in slides (with --checkpoint-dir)")
+    ap.add_argument("--keep", type=int, default=3,
+                    help="checkpoints retained by GC (with --checkpoint-dir)")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume from the newest checkpoint in "
+                         "--checkpoint-dir: completed slides are skipped and "
+                         "the deterministic stream replayed from there; the "
+                         "checkpoint's recorded backend/shard/window config "
+                         "is reused unless --remesh is given")
+    ap.add_argument("--remesh", action="store_true",
+                    help="with --restore: re-place the checkpointed state "
+                         "under THIS invocation's --backend/--shard/--grid "
+                         "and visible devices (live re-meshing) instead of "
+                         "the recorded config")
+    ap.add_argument("--kill-after", type=int, default=None, metavar="N",
+                    help="fault injection (CI recovery smoke): crash "
+                         "mid-append during slide N and exit with code 3; "
+                         "recover with --restore")
     args = ap.parse_args(argv)
 
-    spec = stream_spec(args.dataset)
-    cfg = StreamConfig(min_sup=args.min_sup, n_blocks=args.n_blocks,
-                       block_txns=args.block_txns, backend=args.backend,
-                       shard=args.shard,
-                       block_w=args.block_w, autotune=args.autotune)
     from .mesh import mesh_for_mining
-    mesh = mesh_for_mining(args.backend, args.shard, args.grid)
-    service = StreamQueryService(
-        StreamingMiner(spec.n_items, cfg, mesh=mesh,
-                       keep_transactions=False))
-    eff_shard = {"tidsharded": "words", "grid": "grid"}.get(args.backend,
-                                                            args.shard)
+    spec = stream_spec(args.dataset)
+    start = 0
+    if args.restore:
+        if not args.checkpoint_dir:
+            ap.error("--restore requires --checkpoint-dir")
+        ck_cfg, done = peek_config(args.checkpoint_dir)
+        if args.remesh:
+            backend, shard, grid = args.backend, args.shard, args.grid
+        else:
+            backend, shard, grid = ck_cfg.backend, ck_cfg.shard, None
+        mesh = mesh_for_mining(backend, shard, grid)
+        miner, start = restore_miner(args.checkpoint_dir, mesh=mesh,
+                                     backend=backend, shard=shard,
+                                     keep_transactions=False)
+        cfg = miner.config
+        print(f"[stream] restored {args.checkpoint_dir} at slide {start} "
+              f"({'re-meshed to ' if args.remesh else ''}backend={backend}, "
+              f"shard={shard})")
+    else:
+        cfg = StreamConfig(min_sup=args.min_sup, n_blocks=args.n_blocks,
+                           block_txns=args.block_txns, backend=args.backend,
+                           shard=args.shard,
+                           block_w=args.block_w, autotune=args.autotune)
+        backend, shard = args.backend, args.shard
+        mesh = mesh_for_mining(backend, shard, args.grid)
+        miner = StreamingMiner(spec.n_items, cfg, mesh=mesh,
+                               keep_transactions=False)
+    service = StreamQueryService(miner)
+    ck = (StreamCheckpointer(args.checkpoint_dir,
+                             every=args.checkpoint_every, keep=args.keep)
+          if args.checkpoint_dir else None)
+    eff_shard = {"tidsharded": "words", "grid": "grid"}.get(backend, shard)
     if mesh is None:
         mesh_note = ""
     elif "class" in mesh.axis_names:
@@ -75,26 +128,48 @@ def main(argv=None):
                      f"{mesh.shape['data']} class x data mesh")
     else:
         mesh_note = f", shard={eff_shard} over {mesh.shape['data']} device(s)"
-    print(f"[stream] {spec.name}: window={args.n_blocks}x{args.block_txns} "
-          f"txns, min_sup={args.min_sup}, backend={args.backend}{mesh_note}")
+    print(f"[stream] {spec.name}: window={cfg.n_blocks}x{cfg.block_txns} "
+          f"txns, min_sup={cfg.min_sup}, backend={backend}{mesh_note}")
 
-    for i, batch in enumerate(transaction_stream(
-            args.dataset, args.block_txns, args.batches,
-            seed=args.seed, drift_every=args.drift_every)):
-        res = service.ingest(batch)
-        cls = res.stats["classes"]
-        print(f"[stream] slide {i:3d}: window={res.n_txn} txns "
-              f"({res.stats['window']['filled_blocks']}/{args.n_blocks} blocks) "
-              f"itemsets={res.total} "
-              f"classes={cls['n_active']} (+{cls['n_entered']}/-{cls['n_exited']}) "
-              f"latency={res.stats['slide_s']*1e3:.1f}ms")
-        for iset, sup in service.top_k_itemsets(args.top_k, min_len=2):
-            print(f"[stream]   top {iset} support={sup} ({sup/res.n_txn:.1%})")
-        if args.min_conf > 0:
-            rules = service.rules(args.min_conf, k=3)
-            print(f"[stream]   {len(service.rules(args.min_conf))} rules at "
-                  f"conf>={args.min_conf}; best: "
-                  + "; ".join(f"{a}=>{c} conf={cf:.2f}" for a, c, cf, _ in rules))
+    try:
+        for i, batch in enumerate(transaction_stream(
+                args.dataset, cfg.block_txns, args.batches,
+                seed=args.seed, drift_every=args.drift_every)):
+            if i < start:
+                continue    # replayed deterministically; already in the state
+            if args.kill_after is not None and i == args.kill_after:
+                def _die(name):
+                    if name == "miner:mid_append":
+                        raise InjectedFault(name)
+                set_kill_hook(_die)
+            res = service.ingest(batch)
+            cls = res.stats["classes"]
+            print(f"[stream] slide {i:3d}: window={res.n_txn} txns "
+                  f"({res.stats['window']['filled_blocks']}/{cfg.n_blocks} blocks) "
+                  f"itemsets={res.total} "
+                  f"classes={cls['n_active']} (+{cls['n_entered']}/-{cls['n_exited']}) "
+                  f"latency={res.stats['slide_s']*1e3:.1f}ms")
+            for iset, sup in service.top_k_itemsets(args.top_k, min_len=2):
+                print(f"[stream]   top {iset} support={sup} ({sup/res.n_txn:.1%})")
+            if args.min_conf > 0:
+                rules = service.rules(args.min_conf, k=3)
+                print(f"[stream]   {len(service.rules(args.min_conf))} rules at "
+                      f"conf>={args.min_conf}; best: "
+                      + "; ".join(f"{a}=>{c} conf={cf:.2f}" for a, c, cf, _ in rules))
+            if ck is not None:
+                ck.maybe_save(miner, i + 1)
+    except InjectedFault:
+        if ck is not None:
+            ck.wait()
+        print(f"[stream] injected crash mid-append at slide "
+              f"{args.kill_after}; last durable checkpoint survives — "
+              f"recover with --restore")
+        raise SystemExit(3)
+    finally:
+        clear_kill_hook()
+    if ck is not None:
+        ck.wait()
+        print(f"[stream] checkpoints durable in {args.checkpoint_dir}")
 
 
 if __name__ == "__main__":

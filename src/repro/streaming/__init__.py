@@ -5,9 +5,15 @@ The window is a device-resident ring of packed word-blocks (``WindowRing``);
 matrix incrementally (block deltas) and re-expands only the active
 equivalence classes through the ``core.engine`` backend interface.  Windowed
 results are bit-exact with batch ``core.eclat.mine`` over the same window
-contents (DESIGN.md §5).
+contents (DESIGN.md §5).  The miner's state is serializable
+(``MinerState``/``RingState``, DESIGN.md §10): ``StreamCheckpointer`` writes
+periodic async snapshots and ``restore_miner`` rebuilds — on a different
+mesh factorization if the restoring process brings one.
 """
-from .miner import StreamConfig, StreamingMiner, WindowResult
-from .window import WindowRing
+from .miner import MinerState, StreamConfig, StreamingMiner, WindowResult
+from .persist import StreamCheckpointer, peek_config, restore_miner
+from .window import RingState, WindowRing
 
-__all__ = ["StreamConfig", "StreamingMiner", "WindowResult", "WindowRing"]
+__all__ = ["StreamConfig", "StreamingMiner", "WindowResult", "WindowRing",
+           "MinerState", "RingState", "StreamCheckpointer", "restore_miner",
+           "peek_config"]

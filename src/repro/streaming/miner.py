@@ -43,9 +43,10 @@ from ..core.itemsets import ItemsetStore, LevelRecord, generate_rules
 from ..core.partitioners import assign_partitions
 from ..core.triangular import cooccurrence_counts, frequent_pairs
 from ..core.vertical import sort_items
-from .window import WindowRing
+from ..faults import kill_point
+from .window import RingState, WindowRing
 
-__all__ = ["StreamConfig", "WindowResult", "StreamingMiner"]
+__all__ = ["StreamConfig", "WindowResult", "StreamingMiner", "MinerState"]
 
 
 @dataclasses.dataclass
@@ -67,6 +68,55 @@ class StreamConfig:
 
     def resolve_min_sup(self, n_txn: int) -> int:
         return resolve_min_sup(self.min_sup, n_txn)
+
+
+@dataclasses.dataclass
+class MinerState:
+    """Serializable snapshot of a :class:`StreamingMiner` (DESIGN.md §10).
+
+    Composes the ring and engine contracts with the miner's own incremental
+    state: the co-occurrence count matrix and the previous slide's frequent
+    item set (class-churn lineage).  Everything here is logical — mesh
+    placement, compiled executors and pair buffers are derived on restore —
+    so a snapshot taken under any backend/mesh restores under any other
+    (:meth:`StreamingMiner.from_state`), bit-exact.
+    """
+    n_items: int
+    config: dict                          # StreamConfig, as a plain dict
+    ring: RingState
+    engine: eng.EngineState
+    cooc: np.ndarray                      # (n_items, n_items) int64
+    prev_frequent: Optional[np.ndarray]   # last slide's frequent items
+
+    def to_tree(self):
+        """Flat ``{path: ndarray}`` tree + JSON-able extra, ready for
+        ``training.checkpoint.save_checkpoint`` — ring and engine leaves are
+        namespaced under ``ring/`` and ``engine/``."""
+        ring_tree, ring_extra = self.ring.to_tree()
+        eng_tree, eng_extra = self.engine.to_tree()
+        tree = {"cooc": np.asarray(self.cooc, np.int64)}
+        if self.prev_frequent is not None:
+            tree["prev_frequent"] = np.asarray(self.prev_frequent, np.int64)
+        tree.update({f"ring/{k}": v for k, v in ring_tree.items()})
+        tree.update({f"engine/{k}": v for k, v in eng_tree.items()})
+        extra = {"kind": "miner_state", "version": 1,
+                 "n_items": int(self.n_items), "config": dict(self.config),
+                 "has_prev_frequent": self.prev_frequent is not None,
+                 "ring": ring_extra, "engine": eng_extra}
+        return tree, extra
+
+    @classmethod
+    def from_tree(cls, tree, extra) -> "MinerState":
+        def sub(prefix):
+            return {k[len(prefix):]: v for k, v in tree.items()
+                    if k.startswith(prefix)}
+        return cls(
+            n_items=int(extra["n_items"]), config=dict(extra["config"]),
+            ring=RingState.from_tree(sub("ring/"), extra["ring"]),
+            engine=eng.EngineState.from_tree(sub("engine/"), extra["engine"]),
+            cooc=np.asarray(tree["cooc"], np.int64),
+            prev_frequent=(np.asarray(tree["prev_frequent"], np.int64)
+                           if extra["has_prev_frequent"] else None))
 
 
 @dataclasses.dataclass
@@ -143,9 +193,14 @@ class StreamingMiner:
         """Admit one micro-batch; update ring + counts by block deltas."""
         t0 = time.perf_counter()
         new_block, old_block, n_evicted = self.ring.push(batch)
+        # ring written, count matrix not yet — the torn state recovery must
+        # handle (tests/faultinject.py kills here)
+        kill_point("miner:mid_append")
         # popcount is additive over word blocks, so the count matrix follows
         # the ring exactly: add the admitted block, subtract the evicted one.
         self.cooc += cooccurrence_counts(jnp.asarray(new_block)).astype(np.int64)
+        # admitted block counted, evicted block not yet subtracted
+        kill_point("miner:mid_evict")
         if n_evicted or old_block.any():
             self.cooc -= cooccurrence_counts(jnp.asarray(old_block)).astype(np.int64)
         return {
@@ -260,6 +315,8 @@ class StreamingMiner:
         stats["phase_s"]["level2"] = time.perf_counter() - t0
 
         # ---- levels >= 3: the shared per-class bottom-up loop --------------
+        # level-2 read from the cached counts, deep expansion not yet run
+        kill_point("miner:pre_deep_expand")
         t0 = time.perf_counter()
         run_bottom_up(self.engine, store, lvl_bitmaps,
                       class_id=iu.copy(), item_rank=ju.copy(),
@@ -283,3 +340,52 @@ class StreamingMiner:
     def window_transactions(self) -> List[List[int]]:
         """Live window contents (for parity checks against batch mining)."""
         return self.ring.window_transactions()
+
+    # -- serializable state (DESIGN.md §10) ---------------------------------
+
+    def snapshot_state(self) -> MinerState:
+        """Deep-copied logical state of the whole miner; safe to hand to an
+        async checkpoint writer while the stream keeps sliding."""
+        return MinerState(
+            n_items=self.n_items,
+            config=dataclasses.asdict(self.config),
+            ring=self.ring.snapshot_state(),
+            engine=self.engine.snapshot_state(),
+            cooc=self.cooc.copy(),
+            prev_frequent=(None if self._prev_frequent is None
+                           else self._prev_frequent.copy()))
+
+    @classmethod
+    def from_state(cls, state: MinerState,
+                   mesh: Optional[jax.sharding.Mesh] = None,
+                   *, backend: Optional[str] = None,
+                   shard: Optional[str] = None,
+                   keep_transactions: Optional[bool] = None) -> "StreamingMiner":
+        """Rebuild a miner from a snapshot, possibly re-meshed.
+
+        ``mesh`` is whatever the restoring process brings — fewer devices, a
+        different grid factorization, or ``None`` for single-device — and
+        ``backend`` / ``shard`` override the snapshot's config for
+        cross-family moves (e.g. a ``tidsharded`` checkpoint restored as
+        plain ``pallas``).  All device placement is re-derived from the
+        logical state under the new mesh, so the restored miner's itemsets
+        are bit-exact with the snapshot's lineage (tests/test_faultinject.py
+        holds every backend to it).
+        """
+        fields = {f.name for f in dataclasses.fields(StreamConfig)}
+        cfg_kw = {k: v for k, v in dict(state.config).items() if k in fields}
+        if backend is not None:
+            cfg_kw["backend"] = backend
+        if shard is not None:
+            cfg_kw["shard"] = shard
+        cfg = StreamConfig(**cfg_kw)
+        keep = (state.ring.txns is not None if keep_transactions is None
+                else keep_transactions)
+        miner = cls(state.n_items, cfg, mesh=mesh, keep_transactions=keep)
+        miner.ring.restore_state(state.ring)
+        miner.cooc = np.array(state.cooc, np.int64, copy=True)
+        miner._prev_frequent = (None if state.prev_frequent is None
+                                else np.asarray(state.prev_frequent,
+                                                np.int64).copy())
+        miner.engine.restore_state(state.engine)
+        return miner

@@ -1,0 +1,104 @@
+"""Periodic, non-blocking persistence for the streaming miner.
+
+Bridges the miner's state contract (:class:`~repro.streaming.miner.MinerState`,
+DESIGN.md §10) onto ``training.checkpoint``: a snapshot is taken
+synchronously on the stream thread (cheap host copies), then written by
+``AsyncCheckpointer`` off-thread so the next slide never waits on disk.
+
+Checkpoint step semantics: step ``s`` is the state *after* ``s`` completed
+slides.  ``data.stream.transaction_stream`` is deterministic in its
+arguments, so recovery is restore-at-``s`` + replay batches ``s..`` — the
+Spark lineage-recovery story with the window state as the materialized RDD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Optional, Tuple
+
+import jax
+
+from ..training.checkpoint import AsyncCheckpointer, restore_latest, valid_steps
+from .miner import MinerState, StreamConfig, StreamingMiner
+
+__all__ = ["StreamCheckpointer", "restore_miner", "peek_config"]
+
+
+class StreamCheckpointer:
+    """Snapshot-and-write-behind for a :class:`StreamingMiner`.
+
+    ``save(miner, step)`` is cheap on the caller's thread (host deep-copies
+    via ``snapshot_state``); the directory write, atomic rename and GC run
+    on the :class:`AsyncCheckpointer` background thread.  ``every`` gates
+    :meth:`maybe_save` to one checkpoint per N slides.  Call :meth:`wait`
+    before reading the directory or exiting — it joins the in-flight write
+    and re-raises any writer error (tests rely on this for deterministic
+    fault surfacing; nothing here depends on thread scheduling).
+    """
+
+    def __init__(self, directory: str, *, every: int = 1, keep: int = 3):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.every = int(every)
+        self._ckpt = AsyncCheckpointer(directory, keep=keep)
+
+    @property
+    def directory(self) -> str:
+        return self._ckpt.directory
+
+    def save(self, miner: StreamingMiner, step: int) -> None:
+        tree, extra = miner.snapshot_state().to_tree()
+        self._ckpt.save(int(step), tree, extra=extra)
+
+    def maybe_save(self, miner: StreamingMiner, step: int) -> bool:
+        """Save iff ``step`` lands on the cadence; returns whether it did."""
+        if int(step) % self.every != 0:
+            return False
+        self.save(miner, step)
+        return True
+
+    def wait(self) -> None:
+        self._ckpt.wait()
+
+
+def restore_miner(
+    directory: str,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    *,
+    backend: Optional[str] = None,
+    shard: Optional[str] = None,
+    keep_transactions: Optional[bool] = None,
+) -> Tuple[StreamingMiner, int]:
+    """Rebuild a miner from the newest restorable checkpoint in
+    ``directory`` (falling back past torn/corrupt steps) under whatever
+    ``mesh`` / ``backend`` / ``shard`` the restoring process brings — the
+    re-meshing entry point the stream driver's ``--restore`` / ``--remesh``
+    flags call.  Returns ``(miner, completed_slides)``; resume by replaying
+    the deterministic stream from ``completed_slides``.
+    """
+    flat, manifest, step = restore_latest(directory)
+    state = MinerState.from_tree(flat, manifest["extra"])
+    miner = StreamingMiner.from_state(state, mesh=mesh, backend=backend,
+                                      shard=shard,
+                                      keep_transactions=keep_transactions)
+    return miner, int(manifest["step"])
+
+
+def peek_config(directory: str) -> Tuple[StreamConfig, int]:
+    """The (StreamConfig, completed_slides) of the newest valid checkpoint,
+    from its manifest alone (no array loads) — the driver reads this first
+    to decide which mesh to build before calling :func:`restore_miner`."""
+    fields = {f.name for f in dataclasses.fields(StreamConfig)}
+    for step in reversed(valid_steps(directory)):
+        try:
+            path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+            with open(path) as f:
+                manifest = json.load(f)
+            cfg_kw = {k: v for k, v in manifest["extra"]["config"].items()
+                      if k in fields}
+            return StreamConfig(**cfg_kw), int(manifest["step"])
+        except (OSError, ValueError, KeyError, TypeError):
+            continue
+    raise FileNotFoundError(f"no readable checkpoint manifest under "
+                            f"{directory!r}")

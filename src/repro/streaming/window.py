@@ -21,9 +21,10 @@ device array back.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -32,7 +33,76 @@ import jax.numpy as jnp
 from ..core import bitmap as bm
 from ..dist.sharding import padded_word_count, shard_words
 
-__all__ = ["WindowRing"]
+__all__ = ["WindowRing", "RingState"]
+
+
+@dataclasses.dataclass
+class RingState:
+    """Serializable snapshot of a :class:`WindowRing` (DESIGN.md §10).
+
+    Holds *logical* content only: the host mirror at the logical word width,
+    per-slot transaction counts, and the ring cursor.  The device-resident
+    ring — including shard padding and placement — is derived state,
+    recomputed on restore from (host words, restoring mesh), which is exactly
+    what lets a checkpoint taken on a 4-way word-sharded mesh restore onto 2
+    devices, a 2x2 grid, or a single device bit-exactly.
+    """
+    n_items: int
+    n_blocks: int
+    block_txns: int
+    words: np.ndarray                 # (n_items, n_words) uint32, logical
+    block_counts: np.ndarray          # (n_blocks,) int64
+    head: int
+    filled: int
+    n_advances: int
+    txns: Optional[List[List[List[int]]]] = None   # per-slot, if kept
+
+    def to_tree(self) -> Tuple[Dict[str, np.ndarray], dict]:
+        """(array tree, JSON-able extra) for ``training.checkpoint``.  The
+        ragged per-slot transaction lists are flattened to three int64
+        vectors (slot counts / txn lengths / item ids) so the whole state is
+        a flat dict of ndarrays."""
+        tree: Dict[str, np.ndarray] = {
+            "words": np.ascontiguousarray(self.words, dtype=np.uint32),
+            "block_counts": np.asarray(self.block_counts, np.int64),
+        }
+        if self.txns is not None:
+            tree["txn_slot_counts"] = np.asarray(
+                [len(slot) for slot in self.txns], np.int64)
+            tree["txn_lens"] = np.asarray(
+                [len(t) for slot in self.txns for t in slot], np.int64)
+            tree["txn_items"] = np.asarray(
+                [i for slot in self.txns for t in slot for i in t], np.int64)
+        extra = {"n_items": int(self.n_items),
+                 "n_blocks": int(self.n_blocks),
+                 "block_txns": int(self.block_txns),
+                 "head": int(self.head), "filled": int(self.filled),
+                 "n_advances": int(self.n_advances),
+                 "has_txns": self.txns is not None}
+        return tree, extra
+
+    @classmethod
+    def from_tree(cls, tree: Dict[str, np.ndarray], extra: dict) -> "RingState":
+        txns = None
+        if extra["has_txns"]:
+            txns = []
+            lens = iter(np.asarray(tree["txn_lens"], np.int64).tolist())
+            items = np.asarray(tree["txn_items"], np.int64).tolist()
+            pos = 0
+            for count in np.asarray(tree["txn_slot_counts"], np.int64).tolist():
+                slot = []
+                for _ in range(count):
+                    n = next(lens)
+                    slot.append(items[pos: pos + n])
+                    pos += n
+                txns.append(slot)
+        return cls(n_items=int(extra["n_items"]),
+                   n_blocks=int(extra["n_blocks"]),
+                   block_txns=int(extra["block_txns"]),
+                   words=np.asarray(tree["words"], np.uint32),
+                   block_counts=np.asarray(tree["block_counts"], np.int64),
+                   head=int(extra["head"]), filled=int(extra["filled"]),
+                   n_advances=int(extra["n_advances"]), txns=txns)
 
 
 @partial(jax.jit, donate_argnums=(0,))
@@ -149,6 +219,52 @@ class WindowRing:
         self.filled = min(self.filled + 1, self.n_blocks)
         self.n_advances += 1
         return new_block, old_block, n_evicted
+
+    # -- serializable state (DESIGN.md §10) ---------------------------------
+
+    def snapshot_state(self) -> RingState:
+        """Deep-copied logical state; safe to serialize while the ring keeps
+        sliding."""
+        return RingState(
+            n_items=self.n_items, n_blocks=self.n_blocks,
+            block_txns=self.block_txns, words=self.words.copy(),
+            block_counts=self.block_counts.copy(), head=self.head,
+            filled=self.filled, n_advances=self.n_advances,
+            txns=([[list(t) for t in slot] for slot in self._txns]
+                  if self._txns is not None else None))
+
+    def restore_state(self, state: RingState) -> "WindowRing":
+        """Adopt a snapshot's logical content; the device ring is *re-derived*
+        by placing the host words under this ring's own mesh/spec, so the
+        snapshot may come from any mesh factorization (or none)."""
+        if (state.n_items, state.n_blocks, state.block_txns) != \
+                (self.n_items, self.n_blocks, self.block_txns):
+            raise ValueError(
+                f"ring geometry mismatch: state has (items={state.n_items}, "
+                f"blocks={state.n_blocks}, block_txns={state.block_txns}), "
+                f"ring has ({self.n_items}, {self.n_blocks}, {self.block_txns})")
+        self.words = np.array(state.words, np.uint32, copy=True)
+        self.block_counts = np.array(state.block_counts, np.int64, copy=True)
+        self.head = int(state.head)
+        self.filled = int(state.filled)
+        self.n_advances = int(state.n_advances)
+        self._txns = ([[list(t) for t in slot] for slot in state.txns]
+                      if state.txns is not None else None)
+        if self.mesh is not None:
+            self.device = shard_words(self.words, self.mesh, self.shard_axis)
+        else:
+            self.device = jnp.asarray(self.words)
+        return self
+
+    @classmethod
+    def from_state(cls, state: RingState,
+                   mesh: Optional[jax.sharding.Mesh] = None,
+                   shard_axis: str = "data") -> "WindowRing":
+        """Rebuild a ring from a snapshot under a (possibly different) mesh."""
+        ring = cls(state.n_items, state.n_blocks, state.block_txns,
+                   keep_transactions=state.txns is not None,
+                   mesh=mesh, shard_axis=shard_axis)
+        return ring.restore_state(state)
 
     # -- introspection (tests / bench comparators) --------------------------
 

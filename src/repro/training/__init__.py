@@ -1,6 +1,7 @@
 """repro.training — optimizer, train step, checkpoint, compression, FT."""
-from .checkpoint import (AsyncCheckpointer, latest_step, restore_checkpoint,
-                         save_checkpoint)
+from .checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
+                         restore_checkpoint, restore_latest, save_checkpoint,
+                         valid_steps)
 from .fault_tolerance import RunnerConfig, TrainingRunner
 from .grad_compress import compressed_psum, int8_roundtrip, make_compressor, topk_mask
 from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
@@ -8,7 +9,8 @@ from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
 from .train_step import make_eval_step, make_train_step
 
 __all__ = [
-    "AsyncCheckpointer", "latest_step", "restore_checkpoint", "save_checkpoint",
+    "AsyncCheckpointer", "latest_step", "load_checkpoint",
+    "restore_checkpoint", "restore_latest", "save_checkpoint", "valid_steps",
     "RunnerConfig", "TrainingRunner",
     "compressed_psum", "int8_roundtrip", "make_compressor", "topk_mask",
     "adamw_init", "adamw_update", "clip_by_global_norm", "global_norm",

@@ -8,6 +8,19 @@ latest checkpoint.  Restore is *elastic*: arrays are loaded host-side and
 checkpoint stores logical content only, never device layouts, so a run can
 resume on a different pod count (tests/test_checkpoint.py proves 1-device ->
 4-device -> 1-device round trips).
+
+Crash-consistency contract (DESIGN.md §10):
+
+- the manifest is written *last* inside the temp dir and fsynced, so a step
+  directory that contains a readable manifest contains every leaf it names;
+- only directories with a readable manifest count as steps (``valid_steps``),
+  so torn temp dirs and half-deleted GC victims are invisible to restore;
+- overwriting an existing step renames the old directory aside before the
+  new one lands — there is no instant at which the step name points at a
+  partially-deleted tree;
+- :func:`restore_latest` walks steps newest-first and falls back past any
+  step whose manifest or leaves fail to load, so a crash *anywhere* in the
+  writer loses at most the in-flight step.
 """
 from __future__ import annotations
 
@@ -17,19 +30,26 @@ import re
 import shutil
 import tempfile
 import threading
-from typing import Any, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer"]
+from ..faults import kill_point
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "load_checkpoint",
+           "restore_latest", "latest_step", "valid_steps", "AsyncCheckpointer"]
 
 _MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"step_(\d+)")
 
 
 def _leaf_name(i: int) -> str:
     return f"leaf_{i:05d}.npy"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{int(step):08d}")
 
 
 def _flatten_with_paths(tree):
@@ -53,28 +73,71 @@ def save_checkpoint(directory: str, step: int, tree: Any,
         manifest["leaves"].append(
             {"path": path, "file": fname, "shape": list(arr.shape),
              "dtype": str(arr.dtype)})
+    kill_point("checkpoint:mid_write")   # leaves down, manifest not yet
     with open(os.path.join(tmp, _MANIFEST), "w") as f:
         json.dump(manifest, f)
-    final = os.path.join(directory, f"step_{int(step):08d}")
+        f.flush()
+        os.fsync(f.fileno())
+    kill_point("checkpoint:pre_replace")  # complete tmp, not yet visible
+    final = _step_dir(directory, step)
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.replace(tmp, final)
+        # Re-saving an existing step: rename the old directory aside first so
+        # the step name never points at a partially-deleted tree.  A crash
+        # between the two renames hides this step entirely (restore falls
+        # back to the previous one) — strictly better than the old
+        # rmtree-then-replace, which could destroy the only copy.
+        doomed = final + ".old"
+        shutil.rmtree(doomed, ignore_errors=True)
+        os.replace(final, doomed)
+        os.replace(tmp, final)
+        shutil.rmtree(doomed, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def valid_steps(directory: str) -> List[int]:
+    """Steps whose directory holds a readable manifest, ascending.  Torn temp
+    dirs, GC-renamed victims, and manifests cut off mid-write are excluded."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for d in os.listdir(directory)
-             if (m := re.fullmatch(r"step_(\d+)", d))]
-    return max(steps) if steps else None
+        return []
+    steps = []
+    for d in os.listdir(directory):
+        m = _STEP_RE.fullmatch(d)
+        if not m:
+            continue
+        try:
+            with open(os.path.join(directory, d, _MANIFEST)) as f:
+                json.load(f)
+        except (OSError, ValueError):
+            continue
+        steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = valid_steps(directory)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(directory: str, step: int) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Self-describing restore: no ``like`` tree needed.  Returns
+    ``({leaf_path: host_array}, manifest)`` — callers that persist trees of
+    varying structure (e.g. a miner with or without kept transactions)
+    rebuild from the path map."""
+    ckpt_dir = _step_dir(directory, step)
+    with open(os.path.join(ckpt_dir, _MANIFEST)) as f:
+        manifest = json.load(f)
+    out = {e["path"]: np.load(os.path.join(ckpt_dir, e["file"]))
+           for e in manifest["leaves"]}
+    return out, manifest
 
 
 def restore_checkpoint(directory: str, step: int, like: Any,
                        shardings: Any = None):
     """Restore into the structure of ``like``; reshard onto ``shardings``
     (a matching pytree of ``NamedSharding``/``Sharding``) if given."""
-    ckpt_dir = os.path.join(directory, f"step_{int(step):08d}")
+    ckpt_dir = _step_dir(directory, step)
     with open(os.path.join(ckpt_dir, _MANIFEST)) as f:
         manifest = json.load(f)
     paths, leaves, treedef = _flatten_with_paths(like)
@@ -95,6 +158,26 @@ def restore_checkpoint(directory: str, step: int, like: Any,
     return treedef.unflatten(out), manifest
 
 
+def restore_latest(directory: str, like: Any = None, shardings: Any = None):
+    """Restore the newest step that actually loads, falling back past any
+    partially-written or corrupt step (truncated leaf, missing file, bad
+    manifest).  With ``like=None`` returns ``(path_map, manifest, step)``
+    from :func:`load_checkpoint`; otherwise ``(tree, manifest, step)``."""
+    last_err: Optional[BaseException] = None
+    for step in reversed(valid_steps(directory)):
+        try:
+            if like is None:
+                flat, manifest = load_checkpoint(directory, step)
+            else:
+                flat, manifest = restore_checkpoint(directory, step, like,
+                                                    shardings)
+            return flat, manifest, step
+        except (OSError, ValueError, KeyError) as e:
+            last_err = e
+    raise FileNotFoundError(
+        f"no restorable checkpoint under {directory!r}") from last_err
+
+
 class AsyncCheckpointer:
     """Fire-and-forget checkpoint writes on a background thread, with a
     bounded queue of one (a new save waits for the previous to land — the
@@ -105,6 +188,7 @@ class AsyncCheckpointer:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        self._gc_lock = threading.Lock()
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
         self.wait()
@@ -113,7 +197,7 @@ class AsyncCheckpointer:
         def _write():
             try:
                 save_checkpoint(self.directory, step, host_tree, extra)
-                self._gc()
+                self._gc(just_wrote=int(step))
             except BaseException as e:  # surfaced on next wait()
                 self._error = e
 
@@ -128,10 +212,24 @@ class AsyncCheckpointer:
             err, self._error = self._error, None
             raise err
 
-    def _gc(self):
-        steps = sorted(
-            int(m.group(1)) for d in os.listdir(self.directory)
-            if (m := re.fullmatch(r"step_(\d+)", d)))
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
-                          ignore_errors=True)
+    def _gc(self, just_wrote: Optional[int] = None):
+        """Keep the newest ``keep`` valid steps.  Serialized under a lock so
+        two checkpointers on one directory can't both collect; victims are
+        renamed out of the step namespace *before* deletion, so a concurrent
+        ``restore_latest`` either sees a step completely or not at all —
+        never a directory losing leaves under it.  Steps at or above a save
+        that just landed are never collected, even if an older save's GC runs
+        late."""
+        with self._gc_lock:
+            steps = valid_steps(self.directory)
+            doomed = steps[:-self.keep] if self.keep > 0 else steps
+            for s in doomed:
+                if just_wrote is not None and s >= just_wrote:
+                    continue
+                path = _step_dir(self.directory, s)
+                trash = path + ".gc"
+                try:
+                    os.replace(path, trash)
+                except OSError:
+                    continue    # another collector got it first
+                shutil.rmtree(trash, ignore_errors=True)

@@ -1,0 +1,142 @@
+"""Deterministic fault-injection harness for the streaming miner.
+
+The resilience contract (DESIGN.md §10) says: crash the miner at any phase
+boundary, restore the newest durable checkpoint, replay the deterministic
+stream, and the final window's itemsets are bit-exact with a run that never
+crashed.  This module provides the three pieces the tests compose:
+
+* :func:`crash_at` / :func:`raiser` — install a ``repro.faults`` hook that
+  raises :class:`InjectedFault` at exactly the Nth hit of a named kill
+  point.  The kill is deterministic in (point name, occurrence), never in
+  wall-clock or writer-thread scheduling.
+* :func:`stream_run` / :func:`crashed_run` — drive a miner over a batch
+  list with per-slide checkpoints and an explicit ``wait()`` after each
+  save, so durability at the moment of the crash is a function of the
+  slide index alone.
+* :func:`resume_run` — restore from the directory (optionally onto a
+  different mesh / backend — live re-meshing) and replay the remaining
+  batches.
+
+Checkpoint step semantics (streaming/persist.py): step ``s`` = state after
+``s`` completed slides.  A kill during slide ``s`` — whether in the miner
+itself or inside the checkpoint write for step ``s+1`` — always leaves step
+``s`` as the newest durable checkpoint, so recovery replays ``batches[s:]``.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import numpy as np
+
+from repro.faults import InjectedFault, clear_kill_hook, set_kill_hook
+from repro.streaming import StreamCheckpointer, StreamingMiner, restore_miner
+from repro.training import valid_steps
+
+# every phase boundary the production code names (faults.kill_point sites)
+MINER_POINTS = ("miner:mid_append", "miner:mid_evict",
+                "miner:pre_deep_expand")
+CHECKPOINT_POINTS = ("checkpoint:mid_write", "checkpoint:pre_replace")
+ALL_POINTS = MINER_POINTS + CHECKPOINT_POINTS
+
+
+def raiser(point, occurrence=1):
+    """A kill hook: raise InjectedFault at the Nth hit of ``point``."""
+    seen = {"n": 0}
+
+    def hook(name):
+        if name == point:
+            seen["n"] += 1
+            if seen["n"] >= occurrence:
+                raise InjectedFault(f"{point} (hit {seen['n']})")
+    return hook
+
+
+@contextlib.contextmanager
+def crash_at(point, occurrence=1):
+    """Context manager form of :func:`raiser` (hook cleared on exit)."""
+    set_kill_hook(raiser(point, occurrence))
+    try:
+        yield
+    finally:
+        clear_kill_hook()
+
+
+def make_batches(n_batches, batch_txns, seed=0, n_items=12):
+    """Small dense micro-batches so multi-level itemsets appear at tiny
+    scale (same generator shape as tests/test_streaming.py)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_batches):
+        batch = []
+        for _ in range(batch_txns):
+            t = set(rng.choice(n_items, size=rng.integers(3, 7),
+                               replace=False).tolist())
+            if rng.random() < 0.5:
+                t |= {0, 1, 2}
+            batch.append(sorted(t))
+        out.append(batch)
+    return out
+
+
+def stream_run(n_items, cfg, batches, *, mesh=None, directory=None,
+               every=1, keep=3, kill=None):
+    """Drive a fresh miner over ``batches``; return the last WindowResult.
+
+    With ``directory``, checkpoint every ``every`` slides and ``wait()``
+    after each save so durability is deterministic.  With
+    ``kill=(point, slide)``, arm the kill hook entering that slide; the
+    resulting :class:`InjectedFault` propagates to the caller (out of the
+    miner for miner-phase points, out of the post-save ``wait()`` for
+    checkpoint-phase points).
+    """
+    miner = StreamingMiner(n_items, cfg, mesh=mesh, keep_transactions=False)
+    ck = (StreamCheckpointer(directory, every=every, keep=keep)
+          if directory else None)
+    res = None
+    try:
+        for i, batch in enumerate(batches):
+            if kill is not None and i == kill[1]:
+                set_kill_hook(raiser(kill[0]))
+            res = miner.advance(batch)
+            if ck is not None and ck.maybe_save(miner, i + 1):
+                ck.wait()
+    finally:
+        clear_kill_hook()
+        if ck is not None:
+            with contextlib.suppress(InjectedFault):
+                ck.wait()
+    return res
+
+
+def crashed_run(n_items, cfg, batches, directory, point, kill_slide,
+                *, mesh=None, every=1, keep=3):
+    """A run guaranteed to die at ``point`` during slide ``kill_slide``.
+
+    Asserts the fault actually fired and that a durable checkpoint
+    survived; returns the newest durable step (== ``kill_slide`` for every
+    phase boundary, per the step semantics above).
+    """
+    try:
+        stream_run(n_items, cfg, batches, mesh=mesh, directory=directory,
+                   every=every, keep=keep, kill=(point, kill_slide))
+    except InjectedFault:
+        pass
+    else:
+        raise AssertionError(f"kill point {point!r} never fired")
+    steps = valid_steps(directory)
+    assert steps, f"no durable checkpoint survived the {point!r} crash"
+    return steps[-1]
+
+
+def resume_run(n_items, batches, directory, *, mesh=None, backend=None,
+               shard=None):
+    """Restore the newest durable checkpoint (optionally re-meshed onto
+    ``mesh`` / ``backend`` / ``shard``) and replay the remaining batches;
+    return the final WindowResult."""
+    miner, start = restore_miner(directory, mesh=mesh, backend=backend,
+                                 shard=shard, keep_transactions=False)
+    assert 0 <= start <= len(batches), (start, len(batches))
+    res = None
+    for batch in batches[start:]:
+        res = miner.advance(batch)
+    return res if res is not None else miner.mine_window()

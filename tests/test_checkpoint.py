@@ -83,3 +83,101 @@ def test_elastic_reshard_across_processes(tmp_path):
         str(tmp_path), 3, {"w": jnp.zeros((8, 8))})
     np.testing.assert_array_equal(np.asarray(restored["w"]),
                                   np.arange(64.0).reshape(8, 8))
+
+
+# ---------------------------------------------------------------------------
+# crash-consistency (DESIGN.md §10): torn writes, corrupt steps, GC races
+# ---------------------------------------------------------------------------
+
+from faultinject import crash_at  # noqa: E402
+from repro.faults import InjectedFault  # noqa: E402
+from repro.training import (load_checkpoint, restore_latest,  # noqa: E402
+                            valid_steps)
+from repro.training.checkpoint import AsyncCheckpointer as _AC  # noqa: E402
+
+
+def test_mid_write_crash_preserves_previous_step(tmp_path):
+    """A writer killed after the leaves but before the manifest leaves no
+    visible step — restore falls back to the previous one."""
+    save_checkpoint(str(tmp_path), 1, tree(), extra={"v": 1})
+    with crash_at("checkpoint:mid_write"), pytest.raises(InjectedFault):
+        save_checkpoint(str(tmp_path), 2, tree(), extra={"v": 2})
+    assert valid_steps(str(tmp_path)) == [1]
+    _, manifest, step = restore_latest(str(tmp_path))
+    assert step == 1 and manifest["extra"]["v"] == 1
+
+
+def test_overwrite_same_step_is_crash_safe(tmp_path):
+    """Re-saving an existing step must never destroy the only copy: a kill
+    just before the rename leaves the old content fully restorable
+    (regression: the old rmtree-then-replace deleted it first)."""
+    save_checkpoint(str(tmp_path), 5, {"a": jnp.arange(4.0)}, extra={"v": "old"})
+    with crash_at("checkpoint:pre_replace"), pytest.raises(InjectedFault):
+        save_checkpoint(str(tmp_path), 5, {"a": jnp.zeros(4)}, extra={"v": "new"})
+    flat, manifest = load_checkpoint(str(tmp_path), 5)
+    assert manifest["extra"]["v"] == "old"
+    np.testing.assert_array_equal(flat["a"], np.arange(4.0))
+    # a successful re-save lands the new content and leaves no .old debris
+    save_checkpoint(str(tmp_path), 5, {"a": jnp.zeros(4)}, extra={"v": "new"})
+    flat, manifest = load_checkpoint(str(tmp_path), 5)
+    assert manifest["extra"]["v"] == "new"
+    np.testing.assert_array_equal(flat["a"], np.zeros(4))
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".old")]
+
+
+def test_restore_latest_falls_back_past_corrupt_steps(tmp_path):
+    """A truncated leaf or a missing manifest in the newest step must not
+    stop restore (regression: it crashed instead of falling back)."""
+    save_checkpoint(str(tmp_path), 1, tree(), extra={"v": 1})
+    save_checkpoint(str(tmp_path), 2, tree(), extra={"v": 2})
+    save_checkpoint(str(tmp_path), 3, tree(), extra={"v": 3})
+    # step 3: manifest intact but a leaf truncated mid-write
+    leaf = os.path.join(tmp_path, "step_00000003", "leaf_00000.npy")
+    with open(leaf, "r+b") as f:
+        f.truncate(8)
+    # step 2: manifest gone entirely
+    os.remove(os.path.join(tmp_path, "step_00000002", "manifest.json"))
+    assert valid_steps(str(tmp_path)) == [1, 3]    # 3 still *looks* valid
+    _, manifest, step = restore_latest(str(tmp_path))
+    assert step == 1 and manifest["extra"]["v"] == 1
+    # with like= the same fallback applies
+    restored, manifest, step = restore_latest(str(tmp_path), like=tree())
+    assert step == 1
+    # nothing restorable at all -> FileNotFoundError, not a crash
+    with open(os.path.join(tmp_path, "step_00000001", "leaf_00000.npy"),
+              "r+b") as f:
+        f.truncate(8)
+    with pytest.raises(FileNotFoundError):
+        restore_latest(str(tmp_path))
+
+
+def test_gc_spares_newest_and_just_written(tmp_path):
+    """GC keeps the newest ``keep`` steps and never collects a step at or
+    above the save that triggered it, even if an older save's GC runs late
+    (regression: a racing collector could eat the step just written)."""
+    for s in (1, 2, 3):
+        save_checkpoint(str(tmp_path), s, tree())
+    ck = _AC(str(tmp_path), keep=1)
+    ck._gc(just_wrote=2)             # a stale collector for the step-2 save
+    assert valid_steps(str(tmp_path)) == [2, 3]
+    ck._gc(just_wrote=3)
+    assert valid_steps(str(tmp_path)) == [3]
+    # no half-deleted ".gc" victims left in the step namespace
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".gc")]
+
+
+def test_async_checkpointer_surfaces_writer_error_on_wait(tmp_path):
+    """A fault on the background writer thread is re-raised by wait(), once
+    — deterministic surfacing, no silent checkpoint loss."""
+    ck = AsyncCheckpointer(str(tmp_path), keep=3)
+    ck.save(1, tree())
+    ck.wait()
+    with crash_at("checkpoint:mid_write"):
+        ck.save(2, tree())
+        with pytest.raises(InjectedFault):
+            ck.wait()
+    ck.wait()                        # error was consumed; wait is reusable
+    assert valid_steps(str(tmp_path)) == [1]
+    ck.save(3, tree())               # the checkpointer survives the fault
+    ck.wait()
+    assert valid_steps(str(tmp_path)) == [1, 3]

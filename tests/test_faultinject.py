@@ -1,0 +1,161 @@
+"""Kill-and-restore at every phase boundary, on every backend (DESIGN.md §10).
+
+The contract under test: crash the streaming miner at any named kill point —
+mid-append, mid-evict, between the cached level-2 delta and the deep
+expansion, mid-checkpoint-write, pre-replace — restore the newest durable
+checkpoint, replay the deterministic stream, and the final window's support
+map is bit-exact with a run that never crashed.  Cross-mesh cases prove the
+restore side is free to bring a *different* mesh (live re-meshing): a
+4-device word-sharded checkpoint onto 2 devices, a 2x2 grid onto 4x1, a
+sharded run onto a single device.
+"""
+import os
+
+import jax
+import pytest
+
+from faultinject import (ALL_POINTS, CHECKPOINT_POINTS, crashed_run,
+                         make_batches, resume_run, stream_run)
+from repro.dist.compat import make_mesh
+from repro.faults import InjectedFault
+from repro.streaming import StreamConfig, StreamingMiner, restore_miner
+from repro.training import valid_steps
+
+N_ITEMS = 12
+KILL_SLIDE = 2
+BATCHES = make_batches(4, 24, seed=42, n_items=N_ITEMS)
+BACKENDS = ["jnp", "pallas", "sharded", "tidsharded", "grid"]
+
+
+def _setup(backend):
+    """(StreamConfig, mesh) for each of the five engine backends."""
+    kw = dict(min_sup=5, n_blocks=3, block_txns=32, bucket_min=16)
+    if backend in ("sharded", "tidsharded"):
+        return (StreamConfig(backend=backend, **kw),
+                make_mesh((4,), ("data",)))
+    if backend == "grid":
+        return (StreamConfig(backend="grid", shard="grid", **kw),
+                make_mesh((2, 2), ("class", "data"),
+                          devices=jax.devices()[:4]))
+    return StreamConfig(backend=backend, **kw), None
+
+
+_REF = {}
+
+
+def _reference():
+    """Support map of an uninterrupted run (computed once; every backend is
+    bit-exact with it, so one jnp reference serves the whole matrix)."""
+    if "ref" not in _REF:
+        cfg, mesh = _setup("jnp")
+        _REF["ref"] = stream_run(N_ITEMS, cfg, BATCHES,
+                                 mesh=mesh).support_map()
+    return _REF["ref"]
+
+
+# ---------------------------------------------------------------------------
+# the full matrix: five backends x five phase boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", ALL_POINTS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_and_restore_bit_exact(backend, point, tmp_path):
+    cfg, mesh = _setup(backend)
+    step = crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path), point,
+                       KILL_SLIDE, mesh=mesh)
+    # a kill during slide s — in the miner or in step s+1's write — always
+    # leaves step s as the newest durable checkpoint
+    assert step == KILL_SLIDE
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path), mesh=mesh)
+    assert res.support_map() == _reference(), f"{backend} @ {point}"
+
+
+# ---------------------------------------------------------------------------
+# live re-meshing: restore under a different mesh factorization
+# ---------------------------------------------------------------------------
+
+def test_remesh_tidsharded_4_to_2_devices(tmp_path):
+    cfg, mesh4 = _setup("tidsharded")
+    crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path), "miner:mid_append",
+                KILL_SLIDE, mesh=mesh4)
+    mesh2 = make_mesh((2,), ("data",), devices=jax.devices()[:2])
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path), mesh=mesh2)
+    assert res.support_map() == _reference()
+
+
+def test_remesh_grid_2x2_to_4x1(tmp_path):
+    cfg, mesh22 = _setup("grid")
+    crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path),
+                "miner:pre_deep_expand", KILL_SLIDE, mesh=mesh22)
+    mesh41 = make_mesh((4, 1), ("class", "data"),
+                       devices=jax.devices()[:4])
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path), mesh=mesh41)
+    assert res.support_map() == _reference()
+
+
+def test_remesh_sharded_to_single_device(tmp_path):
+    cfg, mesh4 = _setup("sharded")
+    crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path), "miner:mid_evict",
+                KILL_SLIDE, mesh=mesh4)
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path), mesh=None,
+                     backend="pallas", shard="pairs")
+    assert res.support_map() == _reference()
+
+
+def test_remesh_single_device_to_grid(tmp_path):
+    """The other direction: a plain pallas checkpoint scaled OUT onto the
+    2D grid mesh."""
+    cfg, _ = _setup("pallas")
+    crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path), "miner:mid_append",
+                KILL_SLIDE, mesh=None)
+    _, mesh22 = _setup("grid")
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path), mesh=mesh22,
+                     backend="grid", shard="grid")
+    assert res.support_map() == _reference()
+
+
+# ---------------------------------------------------------------------------
+# durability edges
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("point", CHECKPOINT_POINTS)
+def test_torn_checkpoint_is_invisible(point, tmp_path):
+    """A write killed mid-flight leaves debris (a temp dir, never a step
+    directory with a readable manifest) that valid_steps/restore ignore."""
+    cfg, _ = _setup("jnp")
+    crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path), point, KILL_SLIDE)
+    steps = valid_steps(str(tmp_path))
+    assert steps and steps[-1] == KILL_SLIDE
+    # the torn write's temp dir is still on disk, outside the step namespace
+    debris = [d for d in os.listdir(tmp_path) if d.startswith(".tmp_ckpt_")]
+    assert debris, "expected the killed write's temp dir to remain"
+    miner, start = restore_miner(str(tmp_path))
+    assert start == KILL_SLIDE and miner.ring.n_txn > 0
+
+
+def test_crash_before_first_checkpoint_restores_nothing(tmp_path):
+    """A kill during slide 0 predates any durable state: restore raises and
+    recovery falls back to a fresh miner over the full stream."""
+    cfg, _ = _setup("jnp")
+    with pytest.raises(InjectedFault):
+        stream_run(N_ITEMS, cfg, BATCHES, directory=str(tmp_path),
+                   kill=("miner:mid_append", 0))
+    assert valid_steps(str(tmp_path)) == []
+    with pytest.raises(FileNotFoundError):
+        restore_miner(str(tmp_path))
+    miner = StreamingMiner(N_ITEMS, cfg, keep_transactions=False)
+    res = None
+    for b in BATCHES:
+        res = miner.advance(b)
+    assert res.support_map() == _reference()
+
+
+def test_checkpoint_cadence_replays_uncheckpointed_slides(tmp_path):
+    """every=2 means the newest durable step can trail the crash by a full
+    slide; the replay covers the gap bit-exactly."""
+    cfg, _ = _setup("pallas")
+    step = crashed_run(N_ITEMS, cfg, BATCHES, str(tmp_path),
+                       "miner:pre_deep_expand", 3, every=2)
+    assert step == 2            # steps 1 and 3 were never cadence slides
+    res = resume_run(N_ITEMS, BATCHES, str(tmp_path))
+    assert res.support_map() == _reference()
