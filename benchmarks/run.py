@@ -20,6 +20,9 @@ Prints ``name,us_per_call,derived`` CSV rows (harness contract).
                        + measured backend crossover -> BENCH_kerneltune.json
   recovery             restore-and-resume vs re-mine-from-scratch + live
                        re-meshing, checksum-gated -> BENCH_recovery.json
+  serving              query storms at the async admission front end under
+                       live slides, checksum-gated vs direct unbatched
+                       answers -> BENCH_serving.json
   moe_balance          DESIGN §4: Eclat-style expert placement balance
 
 Env: BENCH_SCALE (default 0.08 of Table-2 sizes), BENCH_FULL=1 for the
@@ -44,6 +47,7 @@ from benchmarks.headline_bench import headline_bench
 from benchmarks.kerneltune_bench import kerneltune_bench
 from benchmarks.micro import kernel_microbench, moe_balance
 from benchmarks.recovery_bench import recovery_bench
+from benchmarks.serving_bench import serving_bench
 from benchmarks.shardscale_bench import shardscale_bench
 from benchmarks.streaming_bench import streaming_bench
 
@@ -60,6 +64,7 @@ TABLES = {
     "gridscale": gridscale_bench,
     "kerneltune": kerneltune_bench,
     "recovery": recovery_bench,
+    "serving": serving_bench,
     "moe_balance": moe_balance,
 }
 
@@ -80,6 +85,7 @@ def main() -> None:
         "gridscale": functools.partial(gridscale_bench, smoke=True),
         "kerneltune": functools.partial(kerneltune_bench, smoke=True),
         "recovery": functools.partial(recovery_bench, smoke=True),
+        "serving": functools.partial(serving_bench, smoke=True),
     } if args.smoke else TABLES
     rows = ["name,us_per_call,derived"]
     failures = []

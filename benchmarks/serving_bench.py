@@ -1,0 +1,153 @@
+"""Serving-path latency: query storms against the async admission front end.
+
+    python benchmarks/serving_bench.py [--smoke]   # or benchmarks/run.py
+
+The unified serving path (DESIGN.md §11) is only worth its queue if it is
+both *fast* (batch + version-keyed cache amortization) and *right*
+(bit-identical with synchronous answering).  This bench fires a seeded
+heterogeneous query storm from concurrent clients at :class:`ServingFrontend`
+while a writer thread slides windows underneath, then:
+
+  storm     p50/p99 enqueue->answer latency, QPS, cache hit rate, batch
+            sizes — measured under live invalidation (every slide bumps
+            ``window_version`` and evicts the cache);
+  verify    every served answer replayed synchronously (no batching, no
+            cache) against the retained snapshot of its stamped version —
+            any checksum divergence raises, it is not a data point;
+  direct    the same query mix answered one-by-one with the cache off, for
+            the amortization ratio (served answer ms vs direct ms).
+
+Writes ``BENCH_serving.json`` for the cross-PR trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+import time
+from typing import List
+
+if __name__ == "__main__":      # standalone run: make `repro` importable
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.data import stream_spec, transaction_stream
+from repro.serving import (AdmissionConfig, ServingFrontend, answer_query,
+                           query_mix, run_storm, verify_storm)
+from repro.serving.metrics import percentiles
+from repro.streaming import StreamConfig, StreamingMiner
+
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+DATASET = "T10I4D100K"
+
+
+def _row(name: str, seconds: float, derived: str) -> str:
+    return f"{name},{seconds * 1e6:.0f},{derived}"
+
+
+def _measure(n_slides: int, n_queries: int, n_clients: int, block_txns: int,
+             n_blocks: int, min_sup: float, backend: str) -> dict:
+    spec = stream_spec(DATASET)
+    cfg = StreamConfig(min_sup=min_sup, n_blocks=n_blocks,
+                       block_txns=block_txns, backend=backend)
+    miner = StreamingMiner(spec.n_items, cfg, keep_transactions=False)
+    acfg = AdmissionConfig(keep_versions=n_slides + 2)
+    frontend = ServingFrontend(miner, acfg)
+    batches = list(transaction_stream(DATASET, block_txns, n_slides, seed=1))
+    frontend.ingest(batches[0])          # storm starts on a non-empty window
+
+    def slide():
+        for b in batches[1:]:
+            frontend.ingest(b)
+            time.sleep(0.002)
+    writer = threading.Thread(target=slide, daemon=True)
+
+    queries = query_mix(n_queries, seed=0)
+    writer.start()
+    t0 = time.perf_counter()
+    outcome = run_storm(frontend, queries, n_clients=n_clients)
+    storm_s = time.perf_counter() - t0
+    writer.join()
+    if outcome["errors"]:
+        raise RuntimeError(f"storm errors: {outcome['errors']}")
+
+    # the bit-identity gate: replay every answer synchronously at its
+    # stamped window_version; divergence raises inside verify_storm
+    ver = verify_storm(frontend, queries, outcome)
+
+    # direct baseline: same mix, one-by-one, cache off, final window
+    snap = frontend.snapshot
+    t_direct: List[float] = []
+    for q in queries:
+        t0 = time.perf_counter()
+        answer_query(snap, q, cache=None)
+        t_direct.append(time.perf_counter() - t0)
+    direct = percentiles(t_direct)
+    direct_mean_ms = sum(t_direct) / len(t_direct) * 1e3
+
+    m = frontend.metrics.summary()
+    c = frontend.cache.stats()
+    frontend.stop()
+    served_ms = m["answer_ms"]["p50"]
+    return {
+        "block_txns": block_txns, "n_blocks": n_blocks,
+        "window_txns": frontend.snapshot.n_txn,
+        "itemsets": len(frontend.snapshot.itemsets),
+        "slides": n_slides, "final_version": frontend.window_version,
+        "n_queries": n_queries, "n_clients": n_clients,
+        "storm_s": round(storm_s, 4),
+        "answered": m["n_answered"], "shed": m["n_shed"],
+        "errors": m["n_errors"],
+        "p50_ms": m["latency_ms"]["p50"], "p99_ms": m["latency_ms"]["p99"],
+        "answer_p50_ms": served_ms,
+        "qps": m["qps"], "mean_batch": m["mean_batch"],
+        "cache_hit_rate": c["hit_rate"], "stale_evicted": c["stale_evicted"],
+        "direct_p50_ms": direct["p50"], "direct_p99_ms": direct["p99"],
+        "direct_mean_ms": round(direct_mean_ms, 4),
+        "amortization": (round(direct["p50"] / served_ms, 2)
+                         if served_ms > 0 else 0.0),
+        "verified": ver["verified"], "unverifiable": len(ver["unverifiable"]),
+        "checksum": ver["checksum"], "identical": ver["identical"],
+    }
+
+
+def serving_bench(out: List[str], smoke: bool = False) -> dict:
+    import jax
+
+    min_sup = 0.01
+    scenarios = ([(4, 80, 4, 128, 4)] if smoke
+                 else [(6, 300, 4, 256, 4), (8, 500, 8, 256, 8)])
+    report: dict = {
+        "dataset": DATASET, "min_sup": min_sup, "smoke": bool(smoke),
+        "backend": "pallas", "jax_backend": jax.default_backend(),
+        "storms": [],
+    }
+    for n_slides, n_queries, n_clients, block_txns, n_blocks in scenarios:
+        entry = _measure(n_slides, n_queries, n_clients, block_txns,
+                         n_blocks, min_sup, backend="pallas")
+        report["storms"].append(entry)
+        out.append(_row(
+            f"serving/q{n_queries}c{n_clients}s{n_slides}",
+            entry["p50_ms"] / 1e3,
+            f"p99_ms={entry['p99_ms']:.2f};qps={entry['qps']:.0f};"
+            f"hit_rate={entry['cache_hit_rate']:.3f};"
+            f"verified={entry['verified']}/{entry['answered']}"))
+    report["all_identical"] = all(s["identical"] for s in report["storms"])
+    with open(BENCH_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    out.append(_row("serving/identical", 0.0,
+                    f"{report['all_identical']};"
+                    f"json={os.path.basename(BENCH_PATH)}"))
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized storm (still writes BENCH_serving.json)")
+    args = ap.parse_args()
+    rows: List[str] = ["name,us_per_call,derived"]
+    serving_bench(rows, smoke=args.smoke)
+    print("\n".join(rows))

@@ -12,7 +12,8 @@ from repro.analysis.report import (dryrun_table, fim_table, gridscale_table,
                                    headline_table, kerneltune_table,
                                    load_bench, load_reports,
                                    perf_log_table, roofline_table,
-                                   shardscale_table, streaming_table)
+                                   serving_table, shardscale_table,
+                                   streaming_table)
 
 HEADER = """# EXPERIMENTS
 
@@ -89,6 +90,12 @@ def main():
         parts.append("\n\n## §Kernel-tune (autotuned tiles + measured "
                      "dispatch crossover)\n")
         parts.append(kerneltune_table(kerneltune))
+
+    serving = load_bench("BENCH_serving.json")
+    if serving:
+        parts.append("\n\n## §Serving (async admission + version-keyed "
+                     "caches under query storms)\n")
+        parts.append(serving_table(serving))
 
     if reports:
         parts.append("\n\n## §Dry-run (compile proof, memory, collective schedule)\n")

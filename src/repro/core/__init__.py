@@ -28,6 +28,7 @@ from .partitioners import (
     default_partitioner,
     greedy_partitioner,
     hash_partitioner,
+    pack_items,
     partition_stats,
     reverse_hash_partitioner,
 )
@@ -46,7 +47,7 @@ __all__ = [
     "WORKLOAD_MODES", "TopKResult", "closed_itemsets", "filter_mode",
     "frequent_from_closed", "maximal_itemsets", "top_k_mine",
     "PARTITIONERS", "assign_partitions", "default_partitioner",
-    "greedy_partitioner", "hash_partitioner", "partition_stats",
+    "greedy_partitioner", "hash_partitioner", "pack_items", "partition_stats",
     "reverse_hash_partitioner",
     "VerticalDB", "build_vertical", "filter_transactions",
     "HostAccumulator", "build_vertical_accumulated",

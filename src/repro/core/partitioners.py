@@ -32,6 +32,7 @@ __all__ = [
     "greedy_partitioner",
     "assign_partitions",
     "partition_stats",
+    "pack_items",
     "PARTITIONERS",
 ]
 
@@ -105,6 +106,21 @@ def assign_partitions(
     fn = PARTITIONERS[partitioner]
     v = np.arange(n_classes, dtype=np.int64)
     return fn(v, p, work)
+
+
+def pack_items(work: np.ndarray, n_slots: int):
+    """Greedy-LPT pack ``len(work)`` items into ``n_slots`` balanced groups.
+
+    The one packing entry point every serving-side caller shares
+    (``serving.engine.pack_requests``, ``serving.stream_query.pack_queries``,
+    the admission drain loop): items are placed heaviest-first on the
+    lightest slot and the balance of the assignment that will actually run
+    is reported.  Returns ``(assignment, stats)``.
+    """
+    work = np.asarray(work, dtype=np.float64)
+    assign = greedy_partitioner(np.arange(work.shape[0]), int(n_slots),
+                                work=work)
+    return assign, partition_stats(assign, work, int(n_slots))
 
 
 def partition_stats(assignment: np.ndarray, work: np.ndarray, p: int) -> dict:

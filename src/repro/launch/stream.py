@@ -15,16 +15,113 @@ is deterministic, so completed slides are skipped and the rest replayed).
 ``--remesh`` restores under *this* invocation's ``--backend``/``--shard``/
 ``--grid`` and visible devices instead of the checkpoint's recorded config —
 live re-meshing, bit-exact either way.
+
+Serving (DESIGN.md §11): ``--serve`` puts the stream behind the async
+admission front end — the slides above run on a writer thread (checkpointer
+and fault injection included) while the main thread fires a
+``--serve-queries`` storm at the bounded queue and verifies every answer
+against the synchronous path at its stamped ``window_version``.  A writer
+that stops beating its heartbeat for ``--stall-timeout`` seconds is
+*reported* (exit code 4) instead of hanging the readers.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 
 from ..data import PAPER_DATASETS, stream_spec, transaction_stream
 from ..faults import InjectedFault, clear_kill_hook, set_kill_hook
 from ..serving import StreamQueryService
 from ..streaming import (StreamCheckpointer, StreamConfig, StreamingMiner,
                          peek_config, restore_miner)
+
+
+def _serve_mode(args, miner, cfg, ck, start):
+    """--serve: slides on a writer thread, query storm on the main thread.
+
+    The writer is the exact synchronous slide loop (checkpointer, kill-hook
+    fault injection and all) moved behind :class:`ServingFrontend`; readers
+    never touch the miner, only published snapshots, so a crashed or stalled
+    writer degrades to answering from the last complete window — detected
+    and reported, never a hang.
+    """
+    from ..serving import (AdmissionConfig, ServingFrontend, query_mix,
+                           run_storm, verify_storm)
+    from ..training import HeartbeatMonitor, WriterStalledError
+
+    acfg = AdmissionConfig(max_queue=args.queue_cap, policy=args.serve_policy,
+                           stall_timeout_s=args.stall_timeout or None,
+                           keep_versions=max(args.batches + 2, 8))
+    frontend = ServingFrontend(miner, acfg)
+    writer_fault = []
+
+    def writer():
+        try:
+            for i, batch in enumerate(transaction_stream(
+                    args.dataset, cfg.block_txns, args.batches,
+                    seed=args.seed, drift_every=args.drift_every)):
+                if i < start:
+                    continue
+                if args.kill_after is not None and i == args.kill_after:
+                    def _die(name):
+                        if name == "miner:mid_append":
+                            raise InjectedFault(name)
+                    set_kill_hook(_die)
+                res = frontend.ingest(batch)
+                print(f"[stream] slide {i:3d}: window={res.n_txn} txns "
+                      f"itemsets={res.total} version={res.version} "
+                      f"latency={res.stats['slide_s']*1e3:.1f}ms")
+                if ck is not None:
+                    ck.maybe_save(miner, i + 1)
+        except InjectedFault as e:
+            writer_fault.append(e)
+        finally:
+            clear_kill_hook()
+            if ck is not None:
+                ck.wait()
+
+    wt = threading.Thread(target=writer, name="miner-writer", daemon=True)
+    wt.start()
+    monitor = (HeartbeatMonitor(frontend.heartbeat, args.stall_timeout,
+                                name="miner writer")
+               if args.stall_timeout else None)
+    queries = query_mix(args.serve_queries, seed=args.seed)
+    outcome = run_storm(frontend, queries, n_clients=args.serve_clients)
+    stalled = None
+    while wt.is_alive():
+        if monitor is not None:
+            try:
+                monitor.assert_alive()
+            except WriterStalledError as e:
+                stalled = e
+                break
+        wt.join(timeout=0.1)
+
+    ver = verify_storm(frontend, queries, outcome)
+    m = frontend.metrics.summary()
+    c = frontend.cache.stats()
+    print(f"[stream] storm: answered {m['n_answered']}/{len(queries)} "
+          f"(shed {m['n_shed']}, errors {m['n_errors']}); latency "
+          f"p50 {m['latency_ms']['p50']:.2f}ms p99 "
+          f"{m['latency_ms']['p99']:.2f}ms; {m['qps']:.0f} qps; cache hit "
+          f"rate {c['hit_rate']:.1%} ({c['stale_evicted']} invalidated)")
+    print(f"[stream] verified {ver['verified']} answers bit-identical at "
+          f"their window versions (checksum {ver['checksum']}); final "
+          f"window_version={frontend.window_version}")
+    frontend.stop()
+    if stalled is not None:
+        print(f"[stream] STALL DETECTED: {stalled} — readers kept answering "
+              f"from window_version={frontend.window_version}")
+        raise SystemExit(4)
+    if writer_fault:
+        print(f"[stream] injected crash mid-append at slide "
+              f"{args.kill_after}; storm kept answering from the last "
+              f"published window — recover with --restore")
+        raise SystemExit(3)
+    if outcome["errors"]:
+        raise SystemExit(f"[stream] query errors: {outcome['errors']}")
+    if ck is not None:
+        print(f"[stream] checkpoints durable in {args.checkpoint_dir}")
 
 
 def main(argv=None):
@@ -86,6 +183,23 @@ def main(argv=None):
                     help="fault injection (CI recovery smoke): crash "
                          "mid-append during slide N and exit with code 3; "
                          "recover with --restore")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the slides on a writer thread behind the async "
+                         "admission front end and storm it with queries "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--serve-queries", type=int, default=120, metavar="N",
+                    help="with --serve: query storm size")
+    ap.add_argument("--serve-clients", type=int, default=4, metavar="N",
+                    help="with --serve: concurrent client threads")
+    ap.add_argument("--serve-policy", default="block",
+                    choices=["block", "shed"],
+                    help="with --serve: full-queue backpressure policy")
+    ap.add_argument("--queue-cap", type=int, default=256, metavar="N",
+                    help="with --serve: bounded admission queue capacity")
+    ap.add_argument("--stall-timeout", type=float, default=5.0, metavar="S",
+                    help="with --serve: writer heartbeat deadline (0 "
+                         "disables); a stalled writer is reported, readers "
+                         "keep answering from the last published window")
     args = ap.parse_args(argv)
 
     from .mesh import mesh_for_mining
@@ -130,6 +244,9 @@ def main(argv=None):
         mesh_note = f", shard={eff_shard} over {mesh.shape['data']} device(s)"
     print(f"[stream] {spec.name}: window={cfg.n_blocks}x{cfg.block_txns} "
           f"txns, min_sup={cfg.min_sup}, backend={backend}{mesh_note}")
+
+    if args.serve:
+        return _serve_mode(args, miner, cfg, ck, start)
 
     try:
         for i, batch in enumerate(transaction_stream(

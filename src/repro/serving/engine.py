@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.partitioners import greedy_partitioner, partition_stats
+from ..core.partitioners import pack_items
 from ..models import Model
+from .metrics import ServingMetrics, now
 
 __all__ = ["Request", "ServingEngine", "pack_requests"]
 
@@ -30,11 +31,10 @@ class Request:
 
 def pack_requests(requests: Sequence[Request], n_batches: int):
     """Greedy-LPT pack requests into ``n_batches`` groups balancing total
-    prefill tokens.  Returns (assignment, stats)."""
+    prefill tokens (shared ``core.partitioners.pack_items`` path, same as
+    the FIM query packer).  Returns (assignment, stats)."""
     work = np.array([r.prompt.shape[0] for r in requests], np.float64)
-    assign = greedy_partitioner(np.arange(len(requests)), n_batches, work=work)
-    stats = partition_stats(assign, work, n_batches)
-    return assign, stats
+    return pack_items(work, n_batches)
 
 
 class ServingEngine:
@@ -46,6 +46,9 @@ class ServingEngine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
+        # same instrumentation layer as the FIM front end: per-request
+        # admission->batch->answer latency, aggregated to p50/p99 + QPS
+        self.metrics = ServingMetrics()
 
     def _sample(self, logits) -> jax.Array:
         if self.temperature <= 0.0:
@@ -86,12 +89,14 @@ class ServingEngine:
         return [np.asarray(o, np.int32) for o in outs]
 
     def serve(self, requests: List[Request], n_batches: int):
+        t_enqueue = now()
         assign, stats = pack_requests(requests, n_batches)
         results: dict = {}
         for gb in range(n_batches):
             group = [r for r, a in zip(requests, assign) if a == gb]
             if not group:
                 continue
+            t_drain = now()
             # exactness: sub-batch by prompt length (no padding mask in the
             # causal prefill; see generate_batch)
             by_len: dict = {}
@@ -99,6 +104,10 @@ class ServingEngine:
                 by_len.setdefault(r.prompt.shape[0], []).append(r)
             for sub in by_len.values():
                 outs = self.generate_batch(sub)
+                t_answer = now()
                 for r, o in zip(sub, outs):
                     results[r.rid] = o
+                    self.metrics.record_answer(t_enqueue, t_drain, t_answer)
+                self.metrics.record_batch(len(sub))
+        stats["latency"] = self.metrics.summary()
         return results, stats

@@ -1,15 +1,17 @@
-"""Live-window FIM query service: top-k itemsets and rules over the stream.
+"""Synchronous adapter over the shared serving scaffolding.
 
-``StreamQueryService`` sits on a :class:`repro.streaming.StreamingMiner` the
-way :class:`ServingEngine` sits on a model: ``ingest`` advances the window
-and refreshes the query snapshot; readers then query the *current window*
-without touching mining state.  Heterogeneous query batches are packed onto
-answer slots with the same greedy-LPT partitioner that packs equivalence
-classes onto executors and prompts onto decode batches (DESIGN.md §4/§5 —
-the paper's balance objective reused at the product surface).
+``StreamQueryService`` keeps the original one-call-at-a-time API (ingest /
+top_k_itemsets / support / rules / answer_batch) but is now a thin layer
+over the pieces the batched front end (``serving.admission``) also uses:
+immutable :class:`~repro.serving.snapshot.WindowSnapshot` publication, the
+version-keyed :class:`~repro.serving.cache.VersionedCache`, and the shared
+answer kernels — so a synchronous answer and a batched answer at the same
+``window_version`` are bit-identical by construction (DESIGN.md §11).
 
-Rule generation is cached per (window snapshot, min_conf): repeated rule
-queries between slides pay the ``generate_rules`` scan once.
+Heterogeneous query batches are packed onto answer slots with the same
+greedy-LPT partitioner that packs equivalence classes onto executors and
+prompts onto decode batches (DESIGN.md §4/§5 — the paper's balance
+objective reused at the product surface).
 """
 from __future__ import annotations
 
@@ -18,11 +20,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.itemsets import generate_rules
-from ..core.partitioners import greedy_partitioner, partition_stats
+from ..core.partitioners import pack_items
 from ..streaming import StreamingMiner, WindowResult
+from .cache import VersionedCache
+from .snapshot import (WindowSnapshot, answer_query, answer_rules,
+                       answer_support, answer_topk)
 
-__all__ = ["ItemsetQuery", "StreamQueryService", "pack_queries"]
+__all__ = ["ItemsetQuery", "StreamQueryService", "pack_queries", "query_work"]
 
 
 @dataclasses.dataclass
@@ -40,76 +44,111 @@ class ItemsetQuery:
     min_conf: float = 0.8
 
 
+def query_work(query: ItemsetQuery, n_itemsets: int) -> float:
+    """Estimated store-scan work of one query, in entry-visit units.
+
+    The estimate folds in the query's own parameters, not just its kind
+    (the regression: a ``k=1`` probe and a ``k=10_000`` scan were costed
+    identically, so the greedy packer balanced the wrong quantity):
+
+    * topk — one full store scan (the ``min_len`` filter touches every
+      entry) plus top-k selection/copy work proportional to the ``k``
+      entries actually ranked and returned;
+    * rules — antecedent enumeration over the store dominates (~4x a scan),
+      and a *looser* ``min_conf`` keeps more candidate rules alive through
+      confidence ranking, so cost grows as ``min_conf`` drops; the ``k``
+      term prices the returned slice.
+    """
+    n = max(int(n_itemsets), 1)
+    k = n if query.k is None else min(int(query.k), n)
+    if query.kind == "rules":
+        return 4.0 * n * (2.0 - float(query.min_conf)) + 8.0 * k
+    return float(n) + 8.0 * k
+
+
 def pack_queries(queries: Sequence[ItemsetQuery], n_batches: int,
                  n_itemsets: int):
-    """Greedy-LPT pack queries into ``n_batches`` answer slots.
-
-    The work estimate is the number of store entries each query scans:
-    ``n_itemsets`` for a top-k pass, a rule-expansion multiple of it for
-    rule queries (antecedent enumeration dominates).
-    """
-    work = np.array(
-        [n_itemsets * (4.0 if q.kind == "rules" else 1.0) for q in queries],
-        np.float64)
-    assign = greedy_partitioner(np.arange(len(queries)), n_batches, work=work)
-    stats = partition_stats(assign, work, n_batches)
-    return assign, stats
+    """Greedy-LPT pack queries into ``n_batches`` answer slots, balancing
+    the per-query :func:`query_work` estimate.  Returns (assignment,
+    stats)."""
+    work = np.array([query_work(q, n_itemsets) for q in queries], np.float64)
+    return pack_items(work, n_batches)
 
 
 class StreamQueryService:
     def __init__(self, miner: StreamingMiner):
         self.miner = miner
         self.result: Optional[WindowResult] = None
-        self._itemsets: List[Tuple[Tuple[int, ...], int]] = []
-        self._support_map: Dict[Tuple[int, ...], int] = {}
-        self._rules_cache: Dict[float, list] = {}
+        self.cache = VersionedCache()
+        self._snapshot = WindowSnapshot.empty(version=miner.window_version)
         self.n_slides = 0
 
     # -- writer side ---------------------------------------------------------
 
     def ingest(self, batch: Sequence[Sequence[int]]) -> WindowResult:
-        """Advance the window one micro-batch and refresh the snapshot."""
+        """Advance the window one micro-batch and publish a new snapshot."""
         result = self.miner.advance(batch)
-        self.result = result
-        self._itemsets = result.itemsets()
-        self._support_map = dict(self._itemsets)
-        self._rules_cache = {}
-        self.n_slides += 1
+        self.publish(result)
         return result
+
+    def publish(self, result: WindowResult) -> WindowSnapshot:
+        """Swap in an immutable snapshot of ``result`` (one atomic reference
+        assignment — readers see the old window or the new one, never a
+        torn mixture) and invalidate exactly the out-of-version cache
+        entries."""
+        snap = WindowSnapshot.from_result(result)
+        self._snapshot = snap
+        self.result = result
+        self.cache.advance(snap.version)
+        self.n_slides += 1
+        return snap
 
     # -- reader side ---------------------------------------------------------
 
+    @property
+    def snapshot(self) -> WindowSnapshot:
+        """The current published window view (immutable, version-stamped)."""
+        return self._snapshot
+
+    @property
+    def window_version(self) -> int:
+        return self._snapshot.version
+
+    @property
+    def _itemsets(self) -> List[Tuple[Tuple[int, ...], int]]:
+        # legacy alias (pre-snapshot layout); kept for callers/tests that
+        # sized packing off the raw store list
+        return list(self._snapshot.itemsets)
+
+    @property
+    def _support_map(self) -> Dict[Tuple[int, ...], int]:
+        return self._snapshot.support_map
+
     def top_k_itemsets(self, k: int = 10, min_len: int = 1):
         """k most supported frequent itemsets (ties: longer, then lex)."""
-        cand = [(s, it) for it, s in self._itemsets if len(it) >= min_len]
-        cand.sort(key=lambda e: (-e[0], -len(e[1]), e[1]))
-        return [(it, s) for s, it in cand[:k]]
+        return answer_topk(self._snapshot, k, min_len, cache=self.cache)
 
     def support(self, itemset: Sequence[int]) -> int:
         """Support of one itemset over the live window (0 if infrequent)."""
-        return self._support_map.get(tuple(sorted(itemset)), 0)
+        return answer_support(self._snapshot, itemset)
 
     def rules(self, min_conf: float = 0.8, k: Optional[int] = None):
         """Most confident association rules over the live window."""
-        cached = self._rules_cache.get(min_conf)
-        if cached is None:
-            cached = sorted(generate_rules(self._support_map, min_conf),
-                            key=lambda r: (-r[2], -r[3], r[0], r[1]))
-            self._rules_cache[min_conf] = cached
-        return cached if k is None else cached[:k]
+        return answer_rules(self._snapshot, min_conf, k, cache=self.cache)
 
     def answer_batch(self, queries: Sequence[ItemsetQuery], n_batches: int = 4):
         """Answer a heterogeneous query batch, greedy-LPT packed.
 
         The packing is executed, not just reported: queries are answered
-        slot-by-slot in the packed assignment (the regression was computing
-        the packing, answering in input order, and returning balance stats
-        for work that never happened).  Returns ``(answers by qid, packing
-        stats)`` — the stats carry the partitioner's ``padding_efficiency``
-        plus ``queries_per_slot``, the per-answer-slot query counts of the
+        slot-by-slot in the packed assignment against one snapshot grabbed
+        up front.  Returns ``(answers by qid, packing stats)`` — the stats
+        carry the partitioner's ``padding_efficiency`` plus
+        ``queries_per_slot``, the per-answer-slot query counts of the
         assignment that actually ran.
         """
-        assign, stats = pack_queries(queries, n_batches, max(len(self._itemsets), 1))
+        snap = self._snapshot
+        assign, stats = pack_queries(queries, n_batches,
+                                     max(len(snap.itemsets), 1))
         answers: Dict[int, list] = {}
         queries_per_slot: List[int] = []
         for slot in range(int(n_batches)):
@@ -117,11 +156,7 @@ class StreamQueryService:
             queries_per_slot.append(int(members.size))
             for qi in members:
                 q = queries[int(qi)]
-                if q.kind == "topk":
-                    answers[q.qid] = self.top_k_itemsets(q.k, q.min_len)
-                elif q.kind == "rules":
-                    answers[q.qid] = self.rules(q.min_conf, q.k)
-                else:
-                    raise ValueError(f"unknown query kind {q.kind!r}")
+                answers[q.qid], _ = answer_query(snap, q, cache=self.cache)
         stats["queries_per_slot"] = queries_per_slot
+        stats["window_version"] = snap.version
         return answers, stats

@@ -87,6 +87,7 @@ class MinerState:
     engine: eng.EngineState
     cooc: np.ndarray                      # (n_items, n_items) int64
     prev_frequent: Optional[np.ndarray]   # last slide's frequent items
+    window_version: int = 0               # monotonic slide stamp (DESIGN.md §11)
 
     def to_tree(self):
         """Flat ``{path: ndarray}`` tree + JSON-able extra, ready for
@@ -102,6 +103,7 @@ class MinerState:
         extra = {"kind": "miner_state", "version": 1,
                  "n_items": int(self.n_items), "config": dict(self.config),
                  "has_prev_frequent": self.prev_frequent is not None,
+                 "window_version": int(self.window_version),
                  "ring": ring_extra, "engine": eng_extra}
         return tree, extra
 
@@ -116,16 +118,24 @@ class MinerState:
             engine=eng.EngineState.from_tree(sub("engine/"), extra["engine"]),
             cooc=np.asarray(tree["cooc"], np.int64),
             prev_frequent=(np.asarray(tree["prev_frequent"], np.int64)
-                           if extra["has_prev_frequent"] else None))
+                           if extra["has_prev_frequent"] else None),
+            # pre-versioning checkpoints restore at version 0 and count up
+            window_version=int(extra.get("window_version", 0)))
 
 
 @dataclasses.dataclass
 class WindowResult:
-    """Frequent itemsets of the current window + per-slide accounting."""
+    """Frequent itemsets of the current window + per-slide accounting.
+
+    ``version`` is the miner's ``window_version`` at mine time — the cache
+    key of the serving layer (DESIGN.md §11): two results with equal
+    versions were mined from identical window contents.
+    """
 
     store: ItemsetStore
     n_txn: int
     stats: dict
+    version: int = 0
 
     @property
     def counts(self) -> List[int]:
@@ -181,6 +191,11 @@ class StreamingMiner:
                                          compact=config.compact,
                                          hints=(est_q, est_w))
         self._prev_frequent: Optional[np.ndarray] = None
+        # monotonic window-content stamp: bumped once per completed push();
+        # mine_window() stamps its result with the current value, so equal
+        # versions imply identical window contents (the serving cache key,
+        # DESIGN.md §11).  Survives checkpoint/restore via MinerState.
+        self.window_version = 0
 
     # -- incremental state maintenance --------------------------------------
 
@@ -203,6 +218,10 @@ class StreamingMiner:
         kill_point("miner:mid_evict")
         if n_evicted or old_block.any():
             self.cooc -= cooccurrence_counts(jnp.asarray(old_block)).astype(np.int64)
+        # the window's contents changed: new version.  Bumped only after the
+        # ring AND the count matrix agree, so a crash between the kill points
+        # above never publishes a version for a half-applied slide.
+        self.window_version += 1
         return {
             "push_s": time.perf_counter() - t0,
             "n_admitted": len(batch),
@@ -230,6 +249,7 @@ class StreamingMiner:
         abs_min_sup = cfg.resolve_min_sup(n_txn)
         stats: dict = {
             "abs_min_sup": abs_min_sup,
+            "window_version": int(self.window_version),
             "window": {"n_txn": n_txn, "filled_blocks": self.ring.filled,
                        "n_blocks": self.ring.n_blocks,
                        "n_words": self.ring.n_words},
@@ -277,7 +297,8 @@ class StreamingMiner:
         if n1 < 2 or max_k < 2:
             stats.update(self.engine.stats(since=engine_snap))
             stats["total_s"] = time.perf_counter() - t_start
-            return WindowResult(store=store, n_txn=n_txn, stats=stats)
+            return WindowResult(store=store, n_txn=n_txn, stats=stats,
+                                version=self.window_version)
 
         # ---- level 2: straight from the cached count matrix ----------------
         t0 = time.perf_counter()
@@ -327,7 +348,8 @@ class StreamingMiner:
         # engine counters are lifetime-cumulative; report this slide's delta
         stats.update(self.engine.stats(since=engine_snap))
         stats["total_s"] = time.perf_counter() - t_start
-        return WindowResult(store=store, n_txn=n_txn, stats=stats)
+        return WindowResult(store=store, n_txn=n_txn, stats=stats,
+                            version=self.window_version)
 
     def advance(self, batch: Sequence[Sequence[int]]) -> WindowResult:
         """One window slide: admit the micro-batch, then re-mine."""
@@ -353,7 +375,8 @@ class StreamingMiner:
             engine=self.engine.snapshot_state(),
             cooc=self.cooc.copy(),
             prev_frequent=(None if self._prev_frequent is None
-                           else self._prev_frequent.copy()))
+                           else self._prev_frequent.copy()),
+            window_version=int(self.window_version))
 
     @classmethod
     def from_state(cls, state: MinerState,
@@ -387,5 +410,6 @@ class StreamingMiner:
         miner._prev_frequent = (None if state.prev_frequent is None
                                 else np.asarray(state.prev_frequent,
                                                 np.int64).copy())
+        miner.window_version = int(state.window_version)
         miner.engine.restore_state(state.engine)
         return miner

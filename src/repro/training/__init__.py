@@ -2,7 +2,8 @@
 from .checkpoint import (AsyncCheckpointer, latest_step, load_checkpoint,
                          restore_checkpoint, restore_latest, save_checkpoint,
                          valid_steps)
-from .fault_tolerance import RunnerConfig, TrainingRunner
+from .fault_tolerance import (Heartbeat, HeartbeatMonitor, RunnerConfig,
+                              TrainingRunner, WriterStalledError)
 from .grad_compress import compressed_psum, int8_roundtrip, make_compressor, topk_mask
 from .optimizer import (adamw_init, adamw_update, clip_by_global_norm,
                         global_norm, lr_schedule, zero1_spec_tree)
@@ -12,6 +13,7 @@ __all__ = [
     "AsyncCheckpointer", "latest_step", "load_checkpoint",
     "restore_checkpoint", "restore_latest", "save_checkpoint", "valid_steps",
     "RunnerConfig", "TrainingRunner",
+    "Heartbeat", "HeartbeatMonitor", "WriterStalledError",
     "compressed_psum", "int8_roundtrip", "make_compressor", "topk_mask",
     "adamw_init", "adamw_update", "clip_by_global_norm", "global_norm",
     "lr_schedule", "zero1_spec_tree",

@@ -1,0 +1,411 @@
+"""The unified serving path (DESIGN.md §11): version stamping, version-keyed
+caches, async admission, backpressure, liveness, and serving restore.
+
+The load-bearing claims under test:
+
+* equal ``window_version`` ⟹ identical window contents — stamped once per
+  completed slide, crash-consistent (a killed slide publishes no version),
+  and round-tripped through ``MinerState``;
+* every batched answer is bit-identical to the same query answered
+  synchronously at its stamped version, including while concurrent readers
+  race live ``ingest`` calls and under the bounded-queue shed path;
+* a full admission queue sheds or blocks per policy, a stopped frontend
+  fails its pending tickets, and a stalled writer is *reported*
+  (``WriterStalledError``) — readers never hang;
+* the query packer's work model is parameter-sensitive (a ``k=1`` probe is
+  not a ``k=10_000`` scan) and packs real work better than a flat model;
+* a frontend restored from a crashed run's checkpoint answers bit-exactly
+  like one that never crashed (reusing the §10 fault-injection harness).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from faultinject import crashed_run, make_batches
+from repro.serving import (AdmissionConfig, ItemsetQuery, QueryShed,
+                           ServingFrontend, StreamQueryService, Ticket,
+                           VersionedCache, answer_query, pack_queries,
+                           query_mix, query_work, run_storm, verify_storm)
+from repro.streaming import StreamConfig, StreamingMiner
+from repro.training import Heartbeat, HeartbeatMonitor, WriterStalledError
+
+N_ITEMS = 12
+CFG = dict(min_sup=5, n_blocks=3, block_txns=32, bucket_min=16,
+           backend="jnp")
+
+
+def _miner():
+    return StreamingMiner(N_ITEMS, StreamConfig(**CFG),
+                          keep_transactions=False)
+
+
+def _batches(n, seed=0):
+    return make_batches(n, 24, seed=seed, n_items=N_ITEMS)
+
+
+# ---------------------------------------------------------------------------
+# version stamping
+# ---------------------------------------------------------------------------
+
+def test_window_version_monotonic_per_slide():
+    miner = _miner()
+    assert miner.window_version == 0
+    versions = []
+    for b in _batches(4):
+        res = miner.advance(b)
+        versions.append(res.version)
+    assert versions == [1, 2, 3, 4]
+    # a re-mine without a slide shares the version: same window contents
+    assert miner.mine_window().version == 4
+    assert miner.mine_window().stats["window_version"] == 4
+
+
+def test_crashed_slide_publishes_no_version():
+    from faultinject import crash_at
+    from repro.faults import InjectedFault
+
+    miner = _miner()
+    batches = _batches(3)
+    for b in batches[:2]:
+        miner.advance(b)
+    assert miner.window_version == 2
+    with crash_at("miner:mid_append"):
+        with pytest.raises(InjectedFault):
+            miner.advance(batches[2])
+    # the half-applied slide must not have minted a version
+    assert miner.window_version == 2
+
+
+def test_window_version_roundtrips_through_miner_state():
+    miner = _miner()
+    for b in _batches(3):
+        miner.advance(b)
+    state = miner.snapshot_state()
+    restored = StreamingMiner.from_state(state, keep_transactions=False)
+    assert restored.window_version == 3
+    # and keeps counting from there
+    res = restored.advance(_batches(1, seed=7)[0])
+    assert res.version == 4
+
+
+# ---------------------------------------------------------------------------
+# version-keyed cache
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_miss_stale_counters():
+    c = VersionedCache()
+    found, _ = c.lookup(1, "a")
+    assert not found
+    c.insert(1, "a", [1, 2])
+    found, val = c.lookup(1, "a")
+    assert found and val == [1, 2]
+    # same key, newer version: stale (counted and evicted), not a plain miss
+    found, _ = c.lookup(2, "a")
+    assert not found
+    assert (c.hits, c.misses, c.stale) == (1, 1, 1)
+    assert len(c) == 0
+
+
+def test_cache_advance_evicts_exactly_old_versions():
+    c = VersionedCache()
+    c.insert(1, "old1", 1)
+    c.insert(1, "old2", 2)
+    c.insert(2, "new", 3)
+    assert c.advance(2) == 2
+    assert len(c) == 1
+    assert c.lookup(2, "new") == (True, 3)
+    assert c.stats()["stale_evicted"] == 2
+
+
+def test_cached_answer_reused_between_slides_and_invalidated_after():
+    service = StreamQueryService(_miner())
+    service.ingest(_batches(1)[0])
+    a = service.rules(0.7)
+    b = service.rules(0.7)
+    assert a is b                      # k=None hit: the identical object
+    # topk slices the cached full ranking: a hit, even across different k
+    service.top_k_itemsets(5, min_len=1)
+    hits_before = service.cache.stats()["hits"]
+    assert service.top_k_itemsets(3, min_len=1) == \
+        service.top_k_itemsets(5, min_len=1)[:3]
+    assert service.cache.stats()["hits"] >= hits_before + 2
+    service.ingest(_batches(1, seed=3)[0])
+    c = service.rules(0.7)
+    assert c is not a                  # the slide invalidated it
+
+
+# ---------------------------------------------------------------------------
+# query packer work model (the k/min_conf regression)
+# ---------------------------------------------------------------------------
+
+def test_query_work_is_parameter_sensitive():
+    n = 10_000
+    probe = ItemsetQuery(qid=0, kind="topk", k=1)
+    scan = ItemsetQuery(qid=1, kind="topk", k=10_000)
+    assert query_work(probe, n) < query_work(scan, n)
+    tight = ItemsetQuery(qid=2, kind="rules", k=5, min_conf=0.9)
+    loose = ItemsetQuery(qid=3, kind="rules", k=5, min_conf=0.5)
+    assert query_work(tight, n) < query_work(loose, n)
+    # rules dominate a same-k topk (antecedent enumeration)
+    assert query_work(ItemsetQuery(qid=4, kind="rules", k=5, min_conf=0.8), n) \
+        > query_work(ItemsetQuery(qid=5, kind="topk", k=5), n)
+
+
+def test_pack_queries_balances_true_work_better_than_flat_model():
+    n_itemsets, n_slots = 2000, 4
+    # pathological under a flat model: heavy and light queries alternate, so
+    # count-balanced slots are maximally work-imbalanced
+    queries = []
+    for i in range(16):
+        if i % 2 == 0:
+            queries.append(ItemsetQuery(qid=i, kind="rules", k=2000,
+                                        min_conf=0.5))
+        else:
+            queries.append(ItemsetQuery(qid=i, kind="topk", k=1))
+    true_work = np.array([query_work(q, n_itemsets) for q in queries])
+
+    def slot_loads(assign):
+        return np.array([true_work[assign == s].sum()
+                         for s in range(n_slots)])
+
+    assign, stats = pack_queries(queries, n_slots, n_itemsets)
+    from repro.core.partitioners import pack_items
+    flat_assign, _ = pack_items(np.ones(len(queries)), n_slots)
+
+    packed, flat = slot_loads(assign), slot_loads(flat_assign)
+    assert packed.max() < flat.max()   # strictly better balance on real work
+    # near-perfect: max slot within 5% of the ideal equal split
+    assert packed.max() <= true_work.sum() / n_slots * 1.05
+    assert stats["padding_efficiency"] >= 0.95
+
+
+def test_answer_batch_stats_reflect_executed_packing():
+    service = StreamQueryService(_miner())
+    service.ingest(_batches(1)[0])
+    queries = query_mix(12, seed=1)
+    answers, stats = service.answer_batch(queries, n_batches=3)
+    assert sorted(answers) == sorted(q.qid for q in queries)
+    assert sum(stats["queries_per_slot"]) == len(queries)
+    assert stats["window_version"] == service.window_version
+
+
+# ---------------------------------------------------------------------------
+# heartbeat / stall detection
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_monitor_latches_and_reports():
+    t = {"now": 0.0}
+    hb = Heartbeat(clock=lambda: t["now"])
+    fired = []
+    mon = HeartbeatMonitor(hb, timeout_s=1.0, on_stall=fired.append,
+                           name="w")
+    t["now"] = 0.9
+    assert not mon.check()
+    hb.beat(step=3)
+    t["now"] = 1.8
+    assert not mon.check()             # the beat reset the age
+    t["now"] = 3.0
+    assert mon.check()
+    with pytest.raises(WriterStalledError, match="no heartbeat"):
+        mon.assert_alive()
+    hb.beat(step=4)
+    assert mon.check()                 # latched: a late beat does not unstall
+    assert len(fired) == 1 and fired[0]["last_step"] == 3
+
+
+def test_wait_for_version_reports_stalled_writer():
+    frontend = ServingFrontend(
+        _miner(), AdmissionConfig(stall_timeout_s=0.05))
+    try:
+        with pytest.raises(WriterStalledError):
+            frontend.wait_for_version(1, timeout=5.0, poll_s=0.01)
+        assert frontend.writer_stalled
+        assert frontend.metrics.summary()["n_stalls"] >= 1
+    finally:
+        frontend.stop()
+
+
+# ---------------------------------------------------------------------------
+# admission: batched answers vs sync, backpressure, lifecycle
+# ---------------------------------------------------------------------------
+
+def test_frontend_matches_synchronous_answers():
+    miner = _miner()
+    frontend = ServingFrontend(miner, AdmissionConfig())
+    try:
+        frontend.ingest(_batches(1)[0])
+        queries = query_mix(20, seed=2)
+        tickets = frontend.submit_many(queries)
+        for q, ticket in zip(queries, tickets):
+            answer, version = ticket.result(timeout=30.0)
+            assert version == frontend.window_version
+            direct, _ = answer_query(frontend.snapshot_at(version), q,
+                                     cache=None)
+            assert answer == direct
+    finally:
+        frontend.stop()
+
+
+def test_shed_policy_sheds_and_queued_queries_stay_consistent():
+    frontend = ServingFrontend(
+        _miner(), AdmissionConfig(max_queue=4, policy="shed"),
+        auto_start=False)                   # nothing drains: queue must fill
+    frontend.ingest(_batches(1)[0])
+    queries = query_mix(6, seed=3)
+    frontend._running = True                 # admit without a drain worker
+    admitted = []
+    shed = 0
+    for q in queries:
+        try:
+            admitted.append(frontend.submit(q))
+        except QueryShed:
+            shed += 1
+    assert len(admitted) == 4 and shed == 2
+    assert frontend.metrics.summary()["n_shed"] == 2
+    # the queue drains once the worker starts; every survivor sees exactly
+    # one consistent version and a bit-identical answer
+    frontend._running = False
+    frontend.start()
+    try:
+        for t in admitted:
+            answer, version = t.result(timeout=30.0)
+            direct, _ = answer_query(frontend.snapshot_at(version), t.query,
+                                     cache=None)
+            assert answer == direct
+    finally:
+        frontend.stop()
+
+
+def test_block_policy_bounded_wait_then_shed():
+    frontend = ServingFrontend(
+        _miner(), AdmissionConfig(max_queue=1, policy="block",
+                                  block_timeout_s=0.1),
+        auto_start=False)
+    frontend._running = True                 # admit without a drain worker
+    frontend.submit(ItemsetQuery(qid=0))
+    t0 = time.perf_counter()
+    with pytest.raises(QueryShed, match="timed out"):
+        frontend.submit(ItemsetQuery(qid=1))
+    assert time.perf_counter() - t0 >= 0.1   # it genuinely waited
+    frontend._running = False
+
+
+def test_stop_fails_pending_tickets_instead_of_hanging():
+    frontend = ServingFrontend(_miner(), AdmissionConfig(), auto_start=False)
+    frontend._running = True
+    ticket = frontend.submit(ItemsetQuery(qid=0))
+    frontend.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        ticket.result(timeout=1.0)
+    with pytest.raises(RuntimeError, match="not running"):
+        frontend.submit(ItemsetQuery(qid=1))
+
+
+def test_submit_rejected_when_never_started():
+    frontend = ServingFrontend(_miner(), auto_start=False)
+    with pytest.raises(RuntimeError, match="not running"):
+        frontend.submit(ItemsetQuery(qid=0))
+
+
+# ---------------------------------------------------------------------------
+# readers racing the writer (satellite: interleaving coverage)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_readers_each_see_one_consistent_version():
+    miner = _miner()
+    frontend = ServingFrontend(
+        miner, AdmissionConfig(keep_versions=16, max_wait_s=0.001))
+    batches = _batches(8, seed=11)
+    frontend.ingest(batches[0])
+    try:
+        def writer():
+            for b in batches[1:]:
+                frontend.ingest(b)
+        wt = threading.Thread(target=writer, daemon=True)
+        queries = query_mix(60, seed=4)
+        wt.start()
+        outcome = run_storm(frontend, queries, n_clients=4, timeout_s=60.0)
+        wt.join(timeout=60.0)
+        assert not wt.is_alive()
+        assert outcome["errors"] == {}
+        assert not outcome["shed"]
+        assert sorted(outcome["answers"]) == [q.qid for q in queries]
+        versions = {v for _, v in outcome["answers"].values()}
+        assert versions <= set(range(1, 9))
+        # the interleaving actually happened: answers span multiple windows
+        assert frontend.window_version == 8
+        # bit-identity of every answer at its stamped version; raises on
+        # any divergence (torn read / wrong-version answer)
+        ver = verify_storm(frontend, queries, outcome)
+        assert ver["verified"] == len(queries)
+        assert not ver["unverifiable"]
+    finally:
+        frontend.stop()
+
+
+def test_interleaving_consistency_under_shed_pressure():
+    """The bounded-queue shed path must not corrupt surviving answers."""
+    miner = _miner()
+    frontend = ServingFrontend(
+        miner, AdmissionConfig(max_queue=2, policy="shed", max_wait_s=0.02,
+                               keep_versions=16))
+    batches = _batches(5, seed=13)
+    frontend.ingest(batches[0])
+    try:
+        def writer():
+            for b in batches[1:]:
+                frontend.ingest(b)
+        wt = threading.Thread(target=writer, daemon=True)
+        wt.start()
+        queries = query_mix(80, seed=5)
+        outcome = run_storm(frontend, queries, n_clients=8, timeout_s=60.0)
+        wt.join(timeout=60.0)
+        assert outcome["errors"] == {}
+        answered = set(outcome["answers"]) | set(outcome["shed"])
+        assert answered == {q.qid for q in queries}   # shed XOR answered
+        ver = verify_storm(frontend, queries, outcome)
+        assert ver["verified"] == len(outcome["answers"])
+    finally:
+        frontend.stop()
+
+
+# ---------------------------------------------------------------------------
+# serving restore (satellite: kill-and-restore through the frontend)
+# ---------------------------------------------------------------------------
+
+def test_frontend_restores_from_crashed_run_and_serves_identically(tmp_path):
+    cfg = StreamConfig(**CFG)
+    batches = _batches(4, seed=42)
+    step = crashed_run(N_ITEMS, cfg, batches, str(tmp_path),
+                       "miner:mid_append", kill_slide=2)
+    assert step == 2
+
+    # the reference server never crashed
+    ref = StreamQueryService(StreamingMiner(N_ITEMS, cfg,
+                                            keep_transactions=False))
+    for b in batches:
+        ref.ingest(b)
+
+    frontend, completed = ServingFrontend.from_checkpoint(
+        str(tmp_path), config=AdmissionConfig(keep_versions=16))
+    try:
+        assert completed == 2
+        # a restored server answers immediately, before any live slide —
+        # from the restored window at the restored version
+        assert frontend.window_version == 2
+        assert len(frontend.snapshot.itemsets) > 0
+        # replay the tail through the frontend, then interrogate both
+        for b in batches[completed:]:
+            frontend.ingest(b)
+        assert frontend.window_version == ref.window_version == 4
+        queries = query_mix(24, seed=6)
+        tickets = frontend.submit_many(queries)
+        for q, t in zip(queries, tickets):
+            answer, version = t.result(timeout=30.0)
+            assert version == 4
+            direct, _ = answer_query(ref.snapshot, q, cache=None)
+            assert answer == direct     # bit-exact with the uncrashed server
+    finally:
+        frontend.stop()
