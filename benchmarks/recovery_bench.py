@@ -96,9 +96,11 @@ def _child(smoke: bool) -> None:
             pass
         finally:
             clear_kill_hook()
-        assert hits["n"] > 0, f"kill point {point} never fired"
+        if not hits["n"] > 0:
+            raise RuntimeError(f"kill point {point} never fired")
         steps = valid_steps(directory)
-        assert steps, "no durable checkpoint survived"
+        if not steps:
+            raise RuntimeError("no durable checkpoint survived")
         return steps[-1]
 
     def resume(directory, mesh, backend=None, shard=None):

@@ -68,8 +68,8 @@ def _measure_window(n_blocks: int, block_txns: int, min_sup: float,
         t0 = time.perf_counter()
         full_res = mine(window, spec.n_items, bcfg)
         t_full.append(time.perf_counter() - t0)
-        assert inc_res.support_map() == full_res.support_map(), \
-            "incremental/full divergence — bench aborted"
+        if inc_res.support_map() != full_res.support_map():
+            raise RuntimeError("incremental/full divergence — bench aborted")
         itemsets = inc_res.total
     inc_ms = float(np.mean(t_inc) * 1e3)
     full_ms = float(np.mean(t_full) * 1e3)

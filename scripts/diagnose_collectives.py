@@ -3,7 +3,11 @@
     PYTHONPATH=src python scripts/diagnose_collectives.py <arch> <shape> [n]
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# append, never overwrite: a caller's XLA_FLAGS must survive (RS004)
+_FLAG = "--xla_force_host_platform_device_count=512"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
 import dataclasses
 import re
 import sys

@@ -7,7 +7,11 @@ hypothesis -> change -> before/after -> verdict entries to reports/perf_log.json
         --hypothesis ... --change ... --before ... --after ... --verdict ...
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# append, never overwrite: a caller's XLA_FLAGS must survive (RS004)
+_FLAG = "--xla_force_host_platform_device_count=512"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FLAG).strip()
 import argparse
 import dataclasses
 import json

@@ -14,6 +14,15 @@ bytes, scaled by the ring-algorithm wire factor for its group size g:
 Instructions inside while-loop bodies (scan stages) are counted once by this
 textual pass — the roofline layer multiplies them back up with the
 scan-calibration factors (see analysis/roofline.py).
+
+Besides the aggregate :class:`CollectiveStats`, each collective is recorded
+as a :class:`CollectiveInstr` (kind, bytes, replica-group size, source line)
+— the ``staticcheck`` IR contract layer asserts per-instruction properties
+(exactly one psum over the declared axis, group size == the reduce-axis
+width) that aggregates can't express.
+
+Unknown dtype tokens raise: silently skipping a dtype would under-count the
+very traffic a byte budget is supposed to bound.
 """
 from __future__ import annotations
 
@@ -21,13 +30,20 @@ import dataclasses
 import re
 from typing import Dict, List
 
-__all__ = ["CollectiveStats", "parse_collectives", "DTYPE_BYTES"]
+__all__ = ["CollectiveStats", "CollectiveInstr", "parse_collectives",
+           "DTYPE_BYTES"]
 
 DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
     "c64": 8, "c128": 16,
 }
+
+# shape-position tokens that carry no payload bytes (control deps etc.)
+_ZERO_BYTE_TOKENS = {"token", "tuple", "opaque"}
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -38,10 +54,23 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
 @dataclasses.dataclass
+class CollectiveInstr:
+    """One collective instruction of the compiled module."""
+
+    kind: str            # canonical: all-reduce / all-gather / ...
+    op: str              # raw opcode (e.g. all-reduce-start)
+    bytes_raw: float     # result-shape bytes, unscaled
+    bytes_wire: float    # ring-scaled wire bytes
+    group_size: int      # replica-group width the collective spans
+    line: int            # 1-based line in the HLO text
+
+
+@dataclasses.dataclass
 class CollectiveStats:
     count: Dict[str, int]
     bytes_raw: Dict[str, float]       # result bytes, unscaled
     bytes_wire: Dict[str, float]      # ring-scaled wire bytes
+    instrs: List[CollectiveInstr] = dataclasses.field(default_factory=list)
 
     @property
     def total_wire_bytes(self) -> float:
@@ -55,8 +84,13 @@ class CollectiveStats:
 def _shape_bytes(sig: str) -> float:
     total = 0.0
     for dtype, dims in _SHAPE_RE.findall(sig):
-        if dtype not in DTYPE_BYTES:
+        if dtype in _ZERO_BYTE_TOKENS:
             continue
+        if dtype not in DTYPE_BYTES:
+            raise ValueError(
+                f"unknown HLO dtype token {dtype!r} in shape {sig!r} — "
+                f"add its width to analysis.hlo_parse.DTYPE_BYTES so "
+                f"collective byte accounting stays complete")
         n = 1
         if dims:
             for d in dims.split(","):
@@ -95,11 +129,12 @@ def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
     count: Dict[str, int] = {}
     braw: Dict[str, float] = {}
     bwire: Dict[str, float] = {}
-    for line in hlo_text.splitlines():
+    instrs: List[CollectiveInstr] = []
+    for lineno, line in enumerate(hlo_text.splitlines(), start=1):
         s = line.strip()
         if not s or s.startswith("//"):
             continue
-        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
         if not m:
             continue
         sig, op = m.group(1), m.group(2)
@@ -117,4 +152,9 @@ def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
         count[kind] = count.get(kind, 0) + 1
         braw[kind] = braw.get(kind, 0.0) + nbytes
         bwire[kind] = bwire.get(kind, 0.0) + nbytes * _wire_factor(kind, g)
-    return CollectiveStats(count=count, bytes_raw=braw, bytes_wire=bwire)
+        instrs.append(CollectiveInstr(
+            kind=kind, op=op, bytes_raw=nbytes,
+            bytes_wire=nbytes * _wire_factor(kind, g),
+            group_size=g, line=lineno))
+    return CollectiveStats(count=count, bytes_raw=braw, bytes_wire=bwire,
+                           instrs=instrs)

@@ -321,7 +321,7 @@ def mine(
     # the chunked no-tri-matrix path below expands the same frontier many
     # times, and per-call placement (a word-axis reshard for tidsharded)
     # would repeat for every chunk
-    bitmaps = execu.prepare_frontier(jnp.asarray(db.bitmaps))
+    bitmaps = execu.prepare_frontier(jax.device_put(db.bitmaps))
     diffsets = config.use_diffsets
 
     # ---- Phase 2: triangular matrix (2-itemset counts) --------------------
@@ -411,7 +411,7 @@ def mine(
             # slice the rung padding off on device before the host transfer
             save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
                                    item_rank, partition, support,
-                                   np.asarray(lvl_bitmaps[: support.shape[0]]),
+                                   jax.device_get(lvl_bitmaps[: support.shape[0]]),
                                    meta=ckpt_meta)
 
     run_bottom_up(execu, store, lvl_bitmaps, class_id, item_rank, partition,
@@ -471,14 +471,14 @@ def resume_mine(
     stats["backend"] = execu.name
     stats["backend_requested"] = config.backend
     part_to_dev = np.arange(eff_p, dtype=np.int64) % max(execu.n_devices, 1)
-    lvl_bitmaps = execu.prepare_frontier(jnp.asarray(fr["bitmaps"]))
+    lvl_bitmaps = execu.prepare_frontier(jax.device_put(fr["bitmaps"]))
 
     on_level = None
     if config.checkpoint_every_level:
         def on_level(k, class_id, item_rank, partition, support, lvl_bitmaps):
             save_mining_checkpoint(config.checkpoint_dir, store, k, class_id,
                                    item_rank, partition, support,
-                                   np.asarray(lvl_bitmaps[: support.shape[0]]),
+                                   jax.device_get(lvl_bitmaps[: support.shape[0]]),
                                    meta=meta)
 
     t0 = time.perf_counter()

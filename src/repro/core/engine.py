@@ -61,6 +61,7 @@ dominated padding waste on small levels (BENCH_engine.json recorded
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 from typing import Callable, Dict, List, Optional, Tuple, Type
@@ -90,6 +91,21 @@ __all__ = [
     "make_engine", "engine_from_state", "resolve_engine",
     "DispatchPolicy", "KERNELTUNE_ENV",
 ]
+
+
+def _dput(x, sharding=None) -> jax.Array:
+    """Explicit host->device upload.  The expand hot loops never rely on
+    implicit ``jnp.asarray`` conversion of host state (staticcheck RS005),
+    so steady-state mining runs clean under ``jax.transfer_guard``.  Mesh
+    backends pass the placement their executor declares (replicated or
+    pair-split) — without it the upload lands on one device and dispatch
+    would re-shard implicitly, which the guard also forbids."""
+    return jax.device_put(x, sharding)
+
+
+def _dput_i32(v, sharding=None) -> jax.Array:
+    """Explicit scalar upload as a strong-typed int32 (see :func:`_dput`)."""
+    return jax.device_put(np.int32(v), sharding)
 
 
 # ---------------------------------------------------------------------------
@@ -270,7 +286,9 @@ def group_pairs_by_device(
     lpad = np.zeros((d, qmax), np.int32)
     rpad = np.zeros((d, qmax), np.int32)
     spad = np.zeros((d, qmax), np.int32)
-    slot_of_pair = np.empty(q, np.int64)
+    # every slot is written by the grouping loop below — the range check
+    # above refuses the one id class that could leave a hole
+    slot_of_pair = np.empty(q, np.int64)  # staticcheck: disable=RS002
     off = 0
     for dev in range(d):
         c = int(counts[dev])
@@ -628,7 +646,8 @@ class Engine:
         sb = bucket_size(max(int(sel.shape[0]), 1), self.compact_min)
         idx = np.zeros(sb, np.int32)
         idx[:sel.shape[0]] = sel
-        return self._take(block, jnp.asarray(idx))
+        return self._take(block, _dput(idx, getattr(self, "_rep_sharding",
+                                                    None)))
 
     def _slice_survivors(self, compact: jax.Array, n_surv: int) -> jax.Array:
         """Rung-slice a fused-epilogue compaction result: rows ``[:n_surv]``
@@ -636,7 +655,7 @@ class Engine:
         the same convention :meth:`_compact` produces, so the two paths are
         interchangeable bit-for-bit."""
         sb = bucket_size(max(int(n_surv), 1), self.compact_min)
-        return compact[:sb]
+        return _prefix_rows(compact, sb)
 
     def prepare_frontier(self, bitmaps: jax.Array) -> jax.Array:
         """Place a frontier the way this backend will carry it (identity for
@@ -729,6 +748,14 @@ def _take_rows(arr: jax.Array, idx: jax.Array) -> jax.Array:
     return jnp.take(arr, idx, axis=0)
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def _prefix_rows(arr: jax.Array, n: int) -> jax.Array:
+    # static-size prefix slice: an eager ``arr[:n]`` dispatches dynamic-slice
+    # with host scalar starts — an implicit h2d the steady-state transfer
+    # guard forbids (staticcheck SH002)
+    return jax.lax.slice_in_dim(arr, 0, n, axis=0)
+
+
 @register_backend("jnp")
 class JnpEngine(Engine):
     """XLA reference executor: one fused jit (gather + AND + popcount +
@@ -748,17 +775,17 @@ class JnpEngine(Engine):
         self._record_padding(q, qb)
         if self.compact:
             out, sup, mask_dev, n_surv = fused_intersect_compact_ref(
-                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-                jnp.int32(min_sup), jnp.int32(q), mode=mode)
-            mask = np.asarray(mask_dev)[:q].astype(bool)
-            sup_np = np.asarray(sup)[:q]
+                bitmaps, _dput(l), _dput(r), _dput(s),
+                _dput_i32(min_sup), _dput_i32(q), mode=mode)
+            mask = jax.device_get(mask_dev)[:q].astype(bool)
+            sup_np = jax.device_get(sup)[:q]
             return LevelResult(mask=mask,
                                supports=sup_np[mask].astype(np.int64),
                                bitmaps=self._slice_survivors(out, int(mask.sum())))
         out, sup, _ = fused_intersect_ref(
-            bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-            jnp.int32(min_sup), mode=mode)
-        sup_np = np.asarray(sup)[:q]
+            bitmaps, _dput(l), _dput(r), _dput(s),
+            _dput_i32(min_sup), mode=mode)
+        sup_np = jax.device_get(sup)[:q]
         mask = sup_np >= min_sup
         sel = np.nonzero(mask)[0]
         return LevelResult(mask=mask,
@@ -796,20 +823,20 @@ class PallasEngine(Engine):
         self._maybe_tune(qb, bitmaps.shape[1], mode)
         if self.compact:
             inter, sup, mask_dev, n_surv = fused_intersect_compact(
-                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-                jnp.int32(min_sup), jnp.int32(q), mode=mode,
+                bitmaps, _dput(l), _dput(r), _dput(s),
+                _dput_i32(min_sup), _dput_i32(q), mode=mode,
                 block_w=self.block_w, interpret=self.interpret)
-            mask = np.asarray(mask_dev)[:q].astype(bool)
-            sup_np = np.asarray(sup)[:q]
+            mask = jax.device_get(mask_dev)[:q].astype(bool)
+            sup_np = jax.device_get(sup)[:q]
             return LevelResult(mask=mask,
                                supports=sup_np[mask].astype(np.int64),
                                bitmaps=self._slice_survivors(inter, int(mask.sum())))
         inter, sup, mask_dev = fused_intersect(
-            bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-            jnp.int32(min_sup), mode=mode, block_w=self.block_w,
+            bitmaps, _dput(l), _dput(r), _dput(s),
+            _dput_i32(min_sup), mode=mode, block_w=self.block_w,
             interpret=self.interpret)
-        mask = np.asarray(mask_dev)[:q].astype(bool)
-        sup_np = np.asarray(sup)[:q]
+        mask = jax.device_get(mask_dev)[:q].astype(bool)
+        sup_np = jax.device_get(sup)[:q]
         sel = np.nonzero(mask)[0]
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
@@ -838,6 +865,9 @@ class ShardedEngine(Engine):
         self.inner = inner
         self.interpret = interpret
         self.n_devices = int(mesh.shape[axis])
+        # upload placements matching the executor's in_specs (see _dput)
+        self._rep_sharding = NamedSharding(mesh, P())
+        self._pair_sharding = NamedSharding(mesh, P(axis))
         if inner not in ("jnp", "pallas"):
             raise ValueError(f"unknown inner executor {inner!r}")
 
@@ -884,12 +914,12 @@ class ShardedEngine(Engine):
         self._maybe_tune(qmax, bitmaps.shape[1], mode)
         out, sup = self._sharded[mode](
             bitmaps,
-            jnp.asarray(lpad.reshape(d * qmax)),
-            jnp.asarray(rpad.reshape(d * qmax)),
-            jnp.asarray(spad.reshape(d * qmax)),
-            jnp.int32(min_sup),
+            _dput(lpad.reshape(d * qmax), self._pair_sharding),
+            _dput(rpad.reshape(d * qmax), self._pair_sharding),
+            _dput(spad.reshape(d * qmax), self._pair_sharding),
+            _dput_i32(min_sup, self._rep_sharding),
         )
-        sup_np = np.asarray(sup).reshape(-1)[slot_of_pair]
+        sup_np = jax.device_get(sup).reshape(-1)[slot_of_pair]
         mask = sup_np >= min_sup
         sel = np.nonzero(mask)[0]
         surv = self._compact(out.reshape(d * qmax, -1),
@@ -922,6 +952,7 @@ class _WordShardedFrontierMixin:
         self.n_shards = int(mesh.shape[data_axis])
         self._spec = word_shard_spec(data_axis)
         self._sharding = NamedSharding(mesh, self._spec)
+        self._rep_sharding = NamedSharding(mesh, P())
         self._take_rows_sharded = jax.jit(
             lambda arr, idx: jax.lax.with_sharding_constraint(
                 jnp.take(arr, idx, axis=0), self._sharding))
@@ -1078,21 +1109,23 @@ class TidShardedEngine(_WordShardedFrontierMixin, Engine):
         bitmaps = self._ensure_sharded(bitmaps)
         self._maybe_tune(qb, bitmaps.shape[1] // self.n_shards, mode)
         if self.compact:
+            rep = self._rep_sharding
             inter, sup, mask_dev, _ = self._sharded[mode](
-                bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-                jnp.int32(min_sup), jnp.int32(q))
-            mask = np.asarray(mask_dev)[:q].astype(bool)
-            sup_np = np.asarray(sup)[:q]
+                bitmaps, _dput(l, rep), _dput(r, rep), _dput(s, rep),
+                _dput_i32(min_sup, rep), _dput_i32(q, rep))
+            mask = jax.device_get(mask_dev)[:q].astype(bool)
+            sup_np = jax.device_get(sup)[:q]
             surv = jax.device_put(
                 self._slice_survivors(inter, int(mask.sum())), self._sharding)
             return LevelResult(mask=mask,
                                supports=sup_np[mask].astype(np.int64),
                                bitmaps=surv)
+        rep = self._rep_sharding
         inter, sup, mask_dev = self._sharded[mode](
-            bitmaps, jnp.asarray(l), jnp.asarray(r), jnp.asarray(s),
-            jnp.int32(min_sup))
-        mask = np.asarray(mask_dev)[:q].astype(bool)
-        sup_np = np.asarray(sup)[:q]
+            bitmaps, _dput(l, rep), _dput(r, rep), _dput(s, rep),
+            _dput_i32(min_sup, rep))
+        mask = jax.device_get(mask_dev)[:q].astype(bool)
+        sup_np = jax.device_get(sup)[:q]
         sel = np.nonzero(mask)[0]
         return LevelResult(mask=mask,
                            supports=sup_np[sel].astype(np.int64),
@@ -1156,6 +1189,7 @@ class GridShardedEngine(_WordShardedFrontierMixin, Engine):
         self.n_class = int(mesh.shape[class_axis])
         # drivers route partition->device over the pair (class) axis
         self.n_devices = self.n_class
+        self._pair_vec_sharding = NamedSharding(mesh, grid_pair_spec(class_axis))
         self._sharded = self._build_partial_kernels(
             inner, interpret, grid_pair_spec(class_axis),
             grid_block_spec(class_axis, data_axis))
@@ -1182,13 +1216,13 @@ class GridShardedEngine(_WordShardedFrontierMixin, Engine):
         self._maybe_tune(qmax, bitmaps.shape[1] // self.n_shards, mode)
         inter, sup, mask_dev = self._sharded[mode](
             bitmaps,
-            jnp.asarray(lpad.reshape(d * qmax)),
-            jnp.asarray(rpad.reshape(d * qmax)),
-            jnp.asarray(spad.reshape(d * qmax)),
-            jnp.int32(min_sup),
+            _dput(lpad.reshape(d * qmax), self._pair_vec_sharding),
+            _dput(rpad.reshape(d * qmax), self._pair_vec_sharding),
+            _dput(spad.reshape(d * qmax), self._pair_vec_sharding),
+            _dput_i32(min_sup, self._rep_sharding),
         )
-        sup_np = np.asarray(sup).reshape(-1)[slot_of_pair]
-        mask = np.asarray(mask_dev).reshape(-1)[slot_of_pair].astype(bool)
+        sup_np = jax.device_get(sup).reshape(-1)[slot_of_pair]
+        mask = jax.device_get(mask_dev).reshape(-1)[slot_of_pair].astype(bool)
         sel = np.nonzero(mask)[0]
         surv = self._compact(inter, slot_of_pair[sel].astype(np.int32))
         return LevelResult(mask=mask,

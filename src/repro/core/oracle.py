@@ -18,7 +18,9 @@ def bruteforce_fim(
             counts[i] = counts.get(i, 0) + 1
     freq_items = sorted(i for i, c in counts.items() if c >= min_sup)
     out: Dict[Tuple[int, ...], int] = {}
-    kmax = max_k or len(freq_items)
+    # None-check, not truthiness: max_k=0 means "no itemsets", not
+    # "unbounded" (staticcheck RS003)
+    kmax = len(freq_items) if max_k is None else max_k
     for k in range(1, kmax + 1):
         found_any = False
         for combo in combinations(freq_items, k):

@@ -28,10 +28,21 @@ def _cooc_block(bitmaps: jax.Array, row_start: jax.Array, block: int) -> jax.Arr
     return jax.lax.population_count(inter).astype(jnp.int32).sum(-1)
 
 
+@partial(jax.jit, static_argnames=("pad",))
+def _pad_rows(bitmaps: jax.Array, pad: int) -> jax.Array:
+    # the fill constant is baked in at trace time — a bare jnp.pad at the
+    # call site would dispatch it as an implicit host scalar, tripping the
+    # steady-state transfer guard (staticcheck SH002)
+    return jnp.pad(bitmaps, ((0, pad), (0, 0)))
+
+
 def cooccurrence_counts(bitmaps, block: int = 64) -> np.ndarray:
     """Full (n, n) co-occurrence count matrix, computed in row blocks so the
     (block, n, W) intermediate stays cache/VMEM sized."""
-    bitmaps = jnp.asarray(bitmaps)
+    if not isinstance(bitmaps, jax.Array):
+        # explicit upload (staticcheck RS005): callers on the slide hot path
+        # hand device arrays in; host arrays are device_put once, up front
+        bitmaps = jax.device_put(np.ascontiguousarray(bitmaps))
     n = bitmaps.shape[0]
     if n == 0:
         return np.zeros((0, 0), np.int32)
@@ -41,10 +52,11 @@ def cooccurrence_counts(bitmaps, block: int = 64) -> np.ndarray:
     while target < n:
         target <<= 1
     pad = target - n
-    bitmaps_p = jnp.pad(bitmaps, ((0, pad), (0, 0))) if pad else bitmaps
+    bitmaps_p = _pad_rows(bitmaps, pad) if pad else bitmaps
     out = []
     for s in range(0, n + pad, block):
-        out.append(np.asarray(_cooc_block(bitmaps_p, s, block))[:, :n])
+        out.append(jax.device_get(
+            _cooc_block(bitmaps_p, jax.device_put(np.int32(s)), block))[:, :n])
     return np.concatenate(out, axis=0)[:n]
 
 

@@ -50,7 +50,13 @@ class VerticalDB:
         return int(self.bitmaps.shape[1])
 
     def validate(self) -> None:
-        assert self.bitmaps.shape == (self.items.shape[0], bm.n_words(self.n_txn))
+        # a real integrity check, not an ``assert`` — it must also hold
+        # under ``python -O`` (staticcheck RS001)
+        want = (self.items.shape[0], bm.n_words(self.n_txn))
+        if self.bitmaps.shape != want:
+            raise RuntimeError(
+                f"vertical bitmap shape drifted: expected {want}, got "
+                f"{self.bitmaps.shape}")
         np.testing.assert_array_equal(bm.support_np(self.bitmaps), self.supports)
 
 

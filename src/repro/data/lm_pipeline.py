@@ -44,7 +44,7 @@ class TokenPipeline:
         rng = np.random.default_rng(
             (self.seed * 1_000_003 + step) * 31 + self.shard_index)
         b = self.batch // self.shard_count
-        toks = np.empty((b, self.seq_len), np.int32)
+        toks = np.zeros((b, self.seq_len), np.int32)
         state = rng.integers(0, self._trans.shape[0], size=b)
         for t in range(self.seq_len):
             u = rng.random(b)

@@ -89,7 +89,7 @@ def attribute_table(
     rng = np.random.default_rng(seed)
     # partition items into per-attribute domains (sizes >= 2 where possible)
     bounds = np.linspace(0, n_items, n_attributes + 1).astype(int)
-    txns = np.empty((n_txn, n_attributes), dtype=np.int64)
+    txns = np.zeros((n_txn, n_attributes), dtype=np.int64)
     for a in range(n_attributes):
         lo, hi = int(bounds[a]), int(bounds[a + 1])
         dom = max(hi - lo, 1)

@@ -1,0 +1,30 @@
+"""Static contract guard for the mining stack (DESIGN.md §12).
+
+Three layers, one gate (``scripts/check_static.py``):
+
+  Layer 1  AST lint over the repo's own Python (``astlint`` + ``rules``):
+           the historical bug classes of PRs 1-9 codified as named rules
+           RS001-RS005, each with a committed must-fail fixture.
+  Layer 2  lowered-IR contract checker (``contracts``): every engine
+           backend plus the streaming ring write is lowered under a forced
+           multi-device mesh and its post-SPMD HLO is walked via
+           ``analysis.hlo_parse`` — the declared collective set, reduce-axis
+           group sizes, and byte budgets are asserted statically.
+  Layer 3  runtime-shape audit (``shapes``): N streaming slides and M mine
+           levels traced under ``jax.log_compiles`` + ``jax.transfer_guard``,
+           asserting the compiled-shape set is closed under the half-pow2
+           bucket ladder (zero steady-state recompiles, zero implicit host
+           transfers).
+
+Layer 1 imports no jax and is safe anywhere; layers 2/3 import jax lazily
+so the lint stays usable in environments without a device runtime.
+"""
+from .report import Finding, Report, SEVERITY_ERROR, SEVERITY_WARNING
+from .rules import RULES, HOT_PATHS, rule_ids
+from .astlint import lint_file, lint_paths, iter_python_files
+
+__all__ = [
+    "Finding", "Report", "SEVERITY_ERROR", "SEVERITY_WARNING",
+    "RULES", "HOT_PATHS", "rule_ids",
+    "lint_file", "lint_paths", "iter_python_files",
+]

@@ -1,0 +1,130 @@
+"""Layer 1: run the rule registry over Python source trees.
+
+Pure-stdlib (``ast`` + ``tokenize`` levels of machinery only): importing
+this module never imports jax, so the lint runs in any environment and in
+a fraction of a second over the whole repo.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Union
+
+from .report import Finding, SEVERITY_WARNING
+from .rules import HOT_PATH_PRAGMA, HOT_PATHS, RULES, LintContext
+
+__all__ = ["iter_python_files", "lint_file", "lint_paths", "SKIP_DIRS"]
+
+SKIP_DIRS = {".git", ".pytest_cache", "__pycache__", ".claude",
+             "node_modules", "reports", "fixtures"}
+
+_SUPPRESS_RE = re.compile(r"#\s*staticcheck:\s*disable=([A-Z0-9, ]+)")
+
+
+def iter_python_files(root: str, subdirs: Sequence[str]) -> List[str]:
+    """All ``.py`` files under ``root/<subdir>`` for each subdir, skipping
+    ``SKIP_DIRS`` (which includes the committed must-fail ``fixtures/``)."""
+    out: List[str] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        if os.path.isfile(base) and base.endswith(".py"):
+            out.append(base)
+            continue
+        for dirpath, dirnames, filenames in os.walk(base):
+            dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    out.append(os.path.join(dirpath, fn))
+    return sorted(out)
+
+
+def _suppressions(lines: List[str]) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            out[i] = {tok.strip() for tok in m.group(1).split(",")
+                      if tok.strip()}
+    return out
+
+
+_PRAGMA_RE = re.compile(r"^\s*" + re.escape(HOT_PATH_PRAGMA) + r"\s*$",
+                        re.MULTILINE)
+
+
+def _hot_functions(relpath: str, source: str) -> Union[str, Set[str], None]:
+    for suffix, names in HOT_PATHS.items():
+        if relpath.endswith(suffix):
+            return names
+    if _PRAGMA_RE.search(source):
+        return "*"
+    return None
+
+
+def _map_functions(tree: ast.AST) -> Dict[int, str]:
+    """id(node) -> name of the innermost enclosing function def."""
+    func_of: Dict[int, str] = {}
+
+    def visit(node: ast.AST, current: Optional[str]):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            current = node.name
+        for child in ast.iter_child_nodes(node):
+            if current is not None:
+                func_of[id(child)] = current
+            visit(child, current)
+
+    visit(tree, None)
+    return func_of
+
+
+def _is_test_path(relpath: str) -> bool:
+    parts = relpath.split("/")
+    base = parts[-1]
+    return ("tests" in parts[:-1] or base.startswith("test_")
+            or base == "conftest.py")
+
+
+def lint_file(path: str, root: Optional[str] = None,
+              severity: str = "error",
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every registered rule over one file.
+
+    ``severity`` overrides the emitted findings' severity (the warn-only
+    tests/benchmarks zones pass ``"warning"``); ``rules`` restricts to a
+    subset of rule ids.
+    """
+    relpath = os.path.relpath(path, root) if root else path
+    relpath = relpath.replace(os.sep, "/")
+    with open(path, "r", encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        tree = ast.parse(source, filename=relpath)
+    except SyntaxError as exc:
+        return [Finding(rule="RS000", path=relpath, line=exc.lineno or 0,
+                        message=f"file does not parse: {exc.msg}")]
+    lines = source.splitlines()
+    ctx = LintContext(
+        path=relpath, tree=tree, lines=lines,
+        suppressed=_suppressions(lines),
+        is_test=_is_test_path(relpath),
+        hot_functions=_hot_functions(relpath, source),
+        func_of=_map_functions(tree))
+    findings: List[Finding] = []
+    for rule in RULES:
+        if rules is not None and rule.id not in rules:
+            continue
+        findings.extend(rule.check(ctx))
+    if severity == SEVERITY_WARNING:
+        for f in findings:
+            f.severity = SEVERITY_WARNING
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def lint_paths(paths: Iterable[str], root: Optional[str] = None,
+               severity: str = "error",
+               rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    out: List[Finding] = []
+    for p in paths:
+        out.extend(lint_file(p, root=root, severity=severity, rules=rules))
+    return out

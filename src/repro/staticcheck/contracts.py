@@ -1,0 +1,360 @@
+"""Layer 2: lowered-IR contract checker over the engine backends.
+
+Every backend's per-level executor — plus the streaming ring's block write —
+is lowered under a forced multi-device mesh, compiled, and its post-SPMD
+HLO walked via ``analysis.hlo_parse``.  The DESIGN §7/§8 axis-ownership
+contracts become static assertions against :data:`BUDGETS`:
+
+  IR001  the collective *set* must match the declared one exactly —
+         tidsharded/grid own exactly one ``psum`` (all-reduce) per level,
+         jnp/pallas/sharded own none, and nothing may all-gather a
+         frontier/window block;
+  IR002  collective payload stays within the byte budget: the one psum
+         carries partial *counts* — 4 bytes per padded pair — never
+         bitmap words;
+  IR003  the psum spans exactly the declared reduce axis: its replica
+         groups are as wide as that axis, so class shards (grid) never
+         mix their disjoint pair blocks.
+
+Each contract has a committed must-fail fixture (:data:`CONTRACT_FIXTURES`)
+— a deliberately wrong shard_map program whose HLO the same assertions must
+reject, proving the checker still has teeth.
+
+Imports jax lazily at call time so ``staticcheck`` Layer 1 stays
+importable without a device runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .report import Finding
+
+__all__ = ["BUDGETS", "BACKENDS_CHECKED", "BackendBudget",
+           "check_backend_contract", "check_ring_write_contract",
+           "check_all_contracts", "CONTRACT_FIXTURES",
+           "check_contract_fixture"]
+
+BACKENDS_CHECKED = ("jnp", "pallas", "sharded", "tidsharded", "grid")
+
+
+@dataclasses.dataclass
+class BackendBudget:
+    """Declared collective behaviour of one backend's level executor."""
+
+    collectives: Dict[str, int]     # exact kind -> count in the lowered HLO
+    reduce_axis: Optional[str]      # mesh axis the one psum spans (or None)
+    bytes_per_pair: int = 4         # int32 partial counts cross the wire
+
+
+BUDGETS: Dict[str, BackendBudget] = {
+    # single-device executors and the communication-free pair-sharded
+    # executor: the frontier is replicated, partial results never cross
+    # devices — zero collectives (the paper's shuffle-free executor stage)
+    "jnp": BackendBudget(collectives={}, reduce_axis=None),
+    "pallas": BackendBudget(collectives={}, reduce_axis=None),
+    "sharded": BackendBudget(collectives={}, reduce_axis=None),
+    # word-sharded executors: exactly one psum of the (Q,) partial counts
+    # over the word (data) axis per level — DESIGN §7 (tidsharded) and §8
+    # (grid, where the psum must NOT span the class axis)
+    "tidsharded": BackendBudget(collectives={"all-reduce": 1},
+                                reduce_axis="data"),
+    "grid": BackendBudget(collectives={"all-reduce": 1},
+                          reduce_axis="data"),
+}
+
+
+def _require_devices(n: int = 2) -> None:
+    import jax
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"the IR contract layer needs >= {n} devices "
+            f"(XLA_FLAGS=--xla_force_host_platform_device_count=4); "
+            f"got {len(jax.devices())}")
+
+
+def lower_backend_hlo(backend: str, *, rows: int = 32, words: int = 64,
+                      qb: int = 256) -> Tuple[str, int, int, int]:
+    """Lower one level expansion of ``backend`` and return
+    ``(hlo_text, n_devices, per_shard_pairs, reduce_axis_width)``.
+
+    Shapes sit on the engine's own ladder (``qb`` a rung multiple of the
+    128 floor); the lowered executor is the exact jitted callable the
+    engine dispatches in ``expand`` — not a re-implementation.
+    """
+    import numpy as np
+    import jax
+    from ..core import engine as eng
+    from ..kernels.fused_intersect import (MODE_TIDSET,
+                                           fused_intersect_compact,
+                                           fused_intersect_compact_ref)
+    from ..launch.mesh import make_data_mesh, make_grid_mesh
+
+    def ivec(n):
+        return jax.device_put(np.zeros(n, np.int32))
+
+    msup = jax.device_put(np.int32(2))
+    if backend in ("jnp", "pallas"):
+        frontier = jax.device_put(np.zeros((rows, words), np.uint32))
+        if backend == "jnp":
+            fn = fused_intersect_compact_ref
+        else:
+            fn = jax.jit(lambda bms, l, r, s, m, nv, mode: (
+                fused_intersect_compact(bms, l, r, s, m, nv, mode=mode)),
+                static_argnames=("mode",))
+        lowered = fn.lower(frontier, ivec(qb), ivec(qb), ivec(qb), msup,
+                           jax.device_put(np.int32(qb)), mode=MODE_TIDSET)
+        return lowered.compile().as_text(), 1, qb, 1
+
+    _require_devices()
+    if backend == "sharded":
+        mesh = make_data_mesh()
+        engine = eng.make_engine("sharded", mesh=mesh)
+        d = engine.n_devices
+        frontier = jax.device_put(np.zeros((rows, words), np.uint32))
+        lowered = engine._sharded[MODE_TIDSET].lower(
+            frontier, ivec(d * qb), ivec(d * qb), ivec(d * qb), msup)
+        return lowered.compile().as_text(), d, qb, 1
+    if backend == "tidsharded":
+        mesh = make_data_mesh()
+        engine = eng.make_engine("tidsharded", mesh=mesh)
+        frontier = engine.prepare_frontier(
+            jax.device_put(np.zeros((rows, words), np.uint32)))
+        lowered = engine._sharded[MODE_TIDSET].lower(
+            frontier, ivec(qb), ivec(qb), ivec(qb), msup,
+            jax.device_put(np.int32(qb)))
+        return (lowered.compile().as_text(), engine.n_shards, qb,
+                engine.n_shards)
+    if backend == "grid":
+        mesh = make_grid_mesh()
+        engine = eng.make_engine("grid", mesh=mesh)
+        d = engine.n_class
+        frontier = engine.prepare_frontier(
+            jax.device_put(np.zeros((rows, words), np.uint32)))
+        lowered = engine._sharded[MODE_TIDSET].lower(
+            frontier, ivec(d * qb), ivec(d * qb), ivec(d * qb), msup)
+        return (lowered.compile().as_text(), d * engine.n_shards, qb,
+                engine.n_shards)
+    raise ValueError(f"unknown backend {backend!r}; "
+                     f"checked: {BACKENDS_CHECKED}")
+
+
+def _assert_budget(target: str, hlo: str, n_devices: int,
+                   per_shard_pairs: int, axis_width: int,
+                   budget: BackendBudget) -> List[Finding]:
+    """The shared contract assertions — run on real backends AND on the
+    must-fail fixtures, so one code path proves both directions."""
+    from ..analysis.hlo_parse import parse_collectives
+    stats = parse_collectives(hlo, n_devices)
+    findings: List[Finding] = []
+    if stats.count != budget.collectives:
+        findings.append(Finding(
+            rule="IR001", path=target, line=0,
+            message=f"collective set {stats.count or '{}'} does not match "
+                    f"the declared {budget.collectives or '{}'} — every "
+                    f"level may ship exactly the declared psum set and "
+                    f"must never all-gather a frontier/window block"))
+    budget_bytes = per_shard_pairs * budget.bytes_per_pair
+    for kind, nbytes in stats.bytes_raw.items():
+        if kind in budget.collectives and nbytes > budget_bytes:
+            findings.append(Finding(
+                rule="IR002", path=target, line=0,
+                message=f"{kind} carries {int(nbytes)} bytes > the "
+                        f"{budget_bytes}-byte count budget "
+                        f"({per_shard_pairs} padded pairs x "
+                        f"{budget.bytes_per_pair} B) — bitmap words are "
+                        f"crossing the interconnect"))
+    if budget.reduce_axis is not None:
+        for instr in stats.instrs:
+            if instr.kind != "all-reduce":
+                continue
+            if instr.group_size != axis_width:
+                findings.append(Finding(
+                    rule="IR003", path=target, line=instr.line,
+                    message=f"psum replica groups span {instr.group_size} "
+                            f"device(s) but the declared reduce axis "
+                            f"{budget.reduce_axis!r} is {axis_width} wide "
+                            f"— the reduction is mixing shards that own "
+                            f"disjoint pair blocks (or missing some that "
+                            f"share one)"))
+    return findings
+
+
+def check_backend_contract(backend: str) -> Tuple[List[Finding], dict]:
+    """Lower one backend and assert its budget; returns (findings, info)."""
+    hlo, n_dev, per_shard, axis_w = lower_backend_hlo(backend)
+    budget = BUDGETS[backend]
+    findings = _assert_budget(f"backend:{backend}", hlo, n_dev, per_shard,
+                              axis_w, budget)
+    from ..analysis.hlo_parse import parse_collectives
+    stats = parse_collectives(hlo, n_dev)
+    info = {"backend": backend, "n_devices": n_dev,
+            "collectives": dict(stats.count),
+            "wire_bytes": stats.total_wire_bytes,
+            "declared": dict(budget.collectives)}
+    return findings, info
+
+
+def check_ring_write_contract() -> Tuple[List[Finding], dict]:
+    """The streaming ring's sharded block write must lower with zero
+    collectives: each shard overwrites only the written-span words it owns
+    (a ``dynamic_update_slice`` on the sharded word axis regresses to an
+    all-gather of the whole window — the bug this contract pins down)."""
+    import numpy as np
+    import jax
+    from ..analysis.hlo_parse import parse_collectives
+    from ..launch.mesh import make_data_mesh
+    from ..streaming.window import WindowRing
+
+    _require_devices()
+    mesh = make_data_mesh()
+    ring = WindowRing(32, 4, 128, keep_transactions=False, mesh=mesh)
+    hlo = ring._write_sharded.lower(
+        jax.ShapeDtypeStruct(ring.device.shape, ring.device.dtype,
+                             sharding=ring.device.sharding),
+        jax.ShapeDtypeStruct((ring.n_items, ring.wpb), np.dtype(np.uint32)),
+        jax.ShapeDtypeStruct((), np.dtype(np.int32)),
+    ).compile().as_text()
+    n_dev = ring.n_shards
+    stats = parse_collectives(hlo, n_dev)
+    findings: List[Finding] = []
+    if stats.total_count:
+        findings.append(Finding(
+            rule="IR001", path="streaming:ring_write", line=0,
+            message=f"the ring block write lowered with collectives "
+                    f"{stats.count} — a slide must touch only the word "
+                    f"span each shard owns (zero collectives)"))
+    info = {"target": "streaming:ring_write", "n_devices": n_dev,
+            "collectives": dict(stats.count)}
+    return findings, info
+
+
+def check_all_contracts() -> Tuple[List[Finding], dict]:
+    findings: List[Finding] = []
+    summary: dict = {"backends": {}}
+    for backend in BACKENDS_CHECKED:
+        fs, info = check_backend_contract(backend)
+        findings.extend(fs)
+        summary["backends"][backend] = info
+    fs, info = check_ring_write_contract()
+    findings.extend(fs)
+    summary["ring_write"] = info
+    return findings, summary
+
+
+# -- must-fail fixtures ------------------------------------------------------
+
+def _fixture_extra_psum() -> Tuple[str, int, int, int, BackendBudget]:
+    """Two psums per level where the contract declares one (IR001)."""
+    import numpy as np
+    import jax
+    from ..dist.compat import shard_map
+    from ..launch.mesh import make_data_mesh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_data_mesh()
+    d = int(mesh.shape["data"])
+
+    def body(pop):
+        total = jax.lax.psum(pop, "data")
+        # a second, redundant reduction — the bug class this catches
+        return total + jax.lax.psum(pop * 0, "data")
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data"),),
+                           out_specs=P()))
+    hlo = fn.lower(jax.ShapeDtypeStruct((d * 256,), np.dtype(np.int32))
+                   ).compile().as_text()
+    return hlo, d, 256, d, BUDGETS["tidsharded"]
+
+
+def _fixture_frontier_allgather() -> Tuple[str, int, int, int, BackendBudget]:
+    """A level that all-gathers the word-sharded frontier (IR001)."""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+    from ..dist.compat import shard_map_unchecked
+    from ..launch.mesh import make_data_mesh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_data_mesh()
+    d = int(mesh.shape["data"])
+
+    def body(block):
+        full = jax.lax.all_gather(block, "data", axis=1, tiled=True)
+        return jnp.sum(jax.lax.population_count(full).astype(jnp.int32),
+                       axis=1)
+
+    fn = jax.jit(shard_map_unchecked(body, mesh=mesh,
+                                     in_specs=(P(None, "data"),),
+                                     out_specs=P()))
+    hlo = fn.lower(jax.ShapeDtypeStruct((256, 64), np.dtype(np.uint32))
+                   ).compile().as_text()
+    return hlo, d, 256, d, BUDGETS["tidsharded"]
+
+
+def _fixture_fat_psum() -> Tuple[str, int, int, int, BackendBudget]:
+    """One psum, but of the whole (Q, W) bitmap block, not the (Q,) counts
+    — right collective set, busted byte budget (IR002)."""
+    import numpy as np
+    import jax
+    from ..dist.compat import shard_map
+    from ..launch.mesh import make_data_mesh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_data_mesh()
+    d = int(mesh.shape["data"])
+
+    def body(block):
+        return jax.lax.psum(block, "data")
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("data", None),),
+                           out_specs=P()))
+    hlo = fn.lower(jax.ShapeDtypeStruct((d * 256, 64), np.dtype(np.int32))
+                   ).compile().as_text()
+    return hlo, d, 256, d, BUDGETS["tidsharded"]
+
+
+def _fixture_wrong_axis_psum() -> Tuple[str, int, int, int, BackendBudget]:
+    """A grid-style psum over BOTH mesh axes: class shards' disjoint pair
+    counts get mixed (IR003, and IR002 once per extra group width)."""
+    import numpy as np
+    import jax
+    from ..dist.compat import shard_map
+    from ..launch.mesh import make_grid_mesh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = make_grid_mesh()
+    n_class = int(mesh.shape["class"])
+    n_data = int(mesh.shape["data"])
+
+    def body(pop):
+        return jax.lax.psum(pop, ("class", "data"))
+
+    fn = jax.jit(shard_map(body, mesh=mesh, in_specs=(P("class"),),
+                           out_specs=P()))
+    hlo = fn.lower(jax.ShapeDtypeStruct((n_class * 256,), np.dtype(np.int32))
+                   ).compile().as_text()
+    # the budget declares the reduce over "data" (width n_data); the bad
+    # program's groups span n_class * n_data devices
+    return hlo, n_class * n_data, 256, n_data, BUDGETS["grid"]
+
+
+CONTRACT_FIXTURES: Dict[str, Callable[[], Tuple[str, int, int, int,
+                                                BackendBudget]]] = {
+    "extra_psum": _fixture_extra_psum,
+    "frontier_allgather": _fixture_frontier_allgather,
+    "fat_psum": _fixture_fat_psum,
+    "wrong_axis_psum": _fixture_wrong_axis_psum,
+}
+
+
+def check_contract_fixture(name: str) -> List[Finding]:
+    """Lower one committed bad program and run the real assertions on it.
+    A healthy checker returns a non-empty finding list for every fixture."""
+    if name not in CONTRACT_FIXTURES:
+        raise ValueError(f"unknown contract fixture {name!r}; "
+                         f"have: {sorted(CONTRACT_FIXTURES)}")
+    _require_devices()
+    hlo, n_dev, per_shard, axis_w, budget = CONTRACT_FIXTURES[name]()
+    return _assert_budget(f"fixture:{name}", hlo, n_dev, per_shard,
+                          axis_w, budget)

@@ -1,0 +1,17 @@
+"""RS005 must-fail fixture: implicit conversions in a declared hot path.
+
+Distilled from the pre-PR-10 slide loop: ``jnp.asarray`` on the host block
+(implicit h2d at jit dispatch) and ``np.asarray`` on the device result
+(implicit d2h) — both break under ``jax.transfer_guard("disallow")``, the
+Layer-3 steady-state contract.  Never imported — the gate lints it and
+must report RS005.
+"""
+# staticcheck: hot-path
+import numpy as np
+import jax.numpy as jnp
+
+
+def push(state, new_block: np.ndarray) -> np.ndarray:
+    state.device = state.writer(state.device, jnp.asarray(new_block),
+                                jnp.int32(0))
+    return np.asarray(state.device)

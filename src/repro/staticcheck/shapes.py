@@ -1,0 +1,276 @@
+"""Layer 3 — runtime-shape static audit (DESIGN.md §12).
+
+The jit caches are only "static" if the set of compiled shapes is closed
+under the half-pow2 bucket ladder: after warm-up, a steady-state slide or
+mine level must never trigger XLA compilation, never move bytes to the
+device implicitly (``jax.transfer_guard("disallow")`` enforced), and every
+recorded pair-buffer padding must sit on a ladder rung.
+
+Three runtime rules:
+
+    SH001  steady-state XLA recompile (a shape escaped the bucket ladder)
+    SH002  implicit host<->device transfer in the audited region
+    SH003  recorded level padding off the bucket ladder
+
+``audit_streaming`` drives ``StreamingMiner`` through warm-up slides and
+then >= 5 audited slides; ``audit_mine`` runs batch ``mine()`` twice and
+audits the second (cache-warm) run.  ``check_shape_fixture`` is the
+must-fail self-test: a deliberately rung-less jit loop plus an implicit
+np-array dispatch, which MUST produce findings or the audit layer has
+rotted.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .report import Finding
+
+__all__ = ["compile_log", "audit_streaming", "audit_mine",
+           "check_shape_fixture", "SHAPE_FIXTURES"]
+
+
+# ---------------------------------------------------------------------------
+# compile-event capture
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def compile_log():
+    """Yield a list that collects XLA "Finished compilation" log messages.
+
+    ``jax.log_compiles`` routes compile events through the ``jax`` logger
+    tree at WARNING; a handler on the parent logger sees every backend
+    (dispatch and pjit/pxla) via propagation.
+    """
+    import jax
+
+    records: List[str] = []
+
+    class _Capture(logging.Handler):
+        def emit(self, rec: logging.LogRecord) -> None:
+            msg = rec.getMessage()
+            if "Finished XLA compilation" in msg:
+                records.append(msg)
+
+    handler = _Capture(level=logging.DEBUG)
+    parent = logging.getLogger("jax")
+    parent.addHandler(handler)
+    try:
+        with jax.log_compiles(True):
+            yield records
+    finally:
+        parent.removeHandler(handler)
+
+
+# ---------------------------------------------------------------------------
+# synthetic deterministic stream
+# ---------------------------------------------------------------------------
+
+def _batches(rng: np.random.Generator, n: int, *, n_items: int,
+             block_txns: int) -> List[List[List[int]]]:
+    """``n`` micro-batches with a planted frequent 4-itemset so mining goes
+    deep (levels >= 4) while the bulk of each transaction stays random."""
+    out = []
+    for _ in range(n):
+        batch = []
+        for _ in range(block_txns):
+            t = set(rng.choice(n_items, size=int(rng.integers(2, 8)),
+                               replace=False).tolist())
+            if rng.random() < 0.6:
+                t |= {0, 1, 2, 3}
+            batch.append(sorted(t))
+        out.append(batch)
+    return out
+
+
+def _ladder_findings(level_padding: Sequence[Tuple[int, int]], floor: int,
+                     n_pair_devices: int, target: str) -> List[Finding]:
+    """SH003 for every recorded padding that is not a per-device ladder rung."""
+    from ..core.engine import bucket_size
+
+    findings = []
+    d = max(int(n_pair_devices), 1)
+    for q, padded in level_padding:
+        per_dev = padded // d if padded % d == 0 else padded
+        if bucket_size(per_dev, floor) != per_dev:
+            findings.append(Finding(
+                rule="SH003", path=target, line=0,
+                message=f"level padding {padded} for q={q} is off the "
+                        f"bucket ladder (per-device {per_dev}, floor {floor})"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# audits
+# ---------------------------------------------------------------------------
+
+def audit_streaming(backend: str = "pallas", shard: str = "pairs",
+                    mesh=None, *, slides: int = 5, warmup: int = 6,
+                    n_items: int = 48, n_blocks: int = 4,
+                    block_txns: int = 128, min_sup: int = 8,
+                    seed: int = 0) -> Tuple[List[Finding], dict]:
+    """Shape-closure audit of ``slides`` steady-state window slides.
+
+    Fills the window, runs ``warmup`` live slides to populate every jit /
+    bucket cache, then audits ``slides`` more under ``transfer_guard`` with
+    the compile log armed.  Returns ``(findings, summary)``.
+    """
+    import jax
+
+    from ..streaming.miner import StreamConfig, StreamingMiner
+
+    target = f"<runtime:streaming/{backend}/{shard}>"
+    rng = np.random.default_rng(seed)
+    # periodic stream: the window's steady state cycles with period
+    # n_blocks + 1, so one warm cycle visits every distinct window state —
+    # audited slides then replay states the jit caches have already seen.
+    # Any compile past warm-up is therefore a genuine ladder escape, not
+    # stream drift.
+    period = n_blocks + 1
+    distinct = _batches(rng, period, n_items=n_items, block_txns=block_txns)
+    batches = [distinct[i % period]
+               for i in range(n_blocks + warmup + slides)]
+    cfg = StreamConfig(min_sup=min_sup, n_blocks=n_blocks,
+                       block_txns=block_txns, backend=backend, shard=shard)
+    miner = StreamingMiner(n_items, cfg, mesh=mesh)
+
+    with compile_log() as warm_recs:
+        for b in batches[: n_blocks + warmup]:
+            miner.advance(b)
+
+    findings: List[Finding] = []
+    audited = 0
+    itemsets = 0
+    for b in batches[n_blocks + warmup:]:
+        with compile_log() as recs:
+            try:
+                with jax.transfer_guard("disallow"):
+                    res = miner.advance(b)
+                itemsets = res.total
+            except Exception as e:  # guard trip surfaces as XlaRuntimeError
+                findings.append(Finding(
+                    rule="SH002", path=target, line=0,
+                    message=f"implicit host transfer in audited slide "
+                            f"{audited}: {e}"))
+                break
+        for msg in recs:
+            findings.append(Finding(
+                rule="SH001", path=target, line=0,
+                message=f"steady-state recompile in audited slide "
+                        f"{audited}: {msg.strip()}"))
+        audited += 1
+
+    findings.extend(_ladder_findings(
+        miner.engine.level_padding, miner.engine.buffers.floor,
+        getattr(miner.engine, "n_devices", 1), target))
+    summary = {
+        "target": target, "warmup_slides": warmup,
+        "warmup_compiles": len(warm_recs),
+        "audited_slides": audited, "itemsets_last_slide": itemsets,
+        "findings": len(findings),
+    }
+    return findings, summary
+
+
+def audit_mine(backend: str = "pallas", *, min_levels: int = 3,
+               n_txn: int = 512, n_items: int = 48,
+               seed: int = 1) -> Tuple[List[Finding], dict]:
+    """Shape-closure audit of a cache-warm batch ``mine()`` run.
+
+    The first run compiles; the second identical run must dispatch entirely
+    from cache with no implicit transfers.  The planted itemset guarantees
+    the lattice is at least ``min_levels`` deep, so the audit covers the
+    deep-expand path, not just the pair level.
+    """
+    import jax
+
+    from ..core.eclat import EclatConfig, mine
+
+    target = f"<runtime:mine/{backend}>"
+    rng = np.random.default_rng(seed)
+    txns = _batches(rng, 1, n_items=n_items, block_txns=n_txn)[0]
+    cfg = EclatConfig(min_sup=0.25, variant="v3", backend=backend)
+    mine(txns, n_items, cfg)                       # warm run: compiles here
+
+    findings: List[Finding] = []
+    with compile_log() as recs:
+        try:
+            with jax.transfer_guard("disallow"):
+                res = mine(txns, n_items, cfg)
+        except Exception as e:
+            findings.append(Finding(
+                rule="SH002", path=target, line=0,
+                message=f"implicit host transfer in warm mine run: {e}"))
+            res = None
+    for msg in recs:
+        findings.append(Finding(
+            rule="SH001", path=target, line=0,
+            message=f"recompile in cache-warm mine run: {msg.strip()}"))
+
+    levels = len(res.counts) if res is not None else 0
+    if res is not None and levels < min_levels:
+        findings.append(Finding(
+            rule="SH001", path=target, line=0,
+            message=f"mine audit only reached {levels} levels "
+                    f"(< {min_levels}) — audit lost its deep-expand "
+                    f"coverage; re-tune the planted itemset"))
+    summary = {
+        "target": target, "levels": levels,
+        "itemsets": res.total if res is not None else 0,
+        "findings": len(findings),
+    }
+    return findings, summary
+
+
+# ---------------------------------------------------------------------------
+# must-fail fixture: the audit layer's own self-test
+# ---------------------------------------------------------------------------
+
+def check_shape_fixture() -> List[Finding]:
+    """Run deliberately contract-breaking programs; MUST return findings.
+
+    Three planted violations, one per rule:
+
+      SH001  a jit dispatched over raw, un-bucketed growing shapes past its
+             warm-up — every "steady-state" call compiles;
+      SH002  a raw np array at jit dispatch under ``transfer_guard`` — the
+             implicit h2d the explicit-``device_put`` discipline forbids;
+      SH003  a recorded padding that sits between ladder rungs.
+    """
+    import jax
+
+    target = "<fixture:shapes>"
+    findings: List[Finding] = []
+
+    def _grow(x):
+        return x * 2 + 1
+
+    jit_grow = jax.jit(_grow)
+    jit_grow(jax.device_put(np.zeros(64, np.int32)))       # warm-up shape
+    with compile_log() as recs:
+        for n in (65, 66, 67):                             # rung-less growth
+            jit_grow(jax.device_put(np.zeros(n, np.int32)))
+    for msg in recs:
+        findings.append(Finding(
+            rule="SH001", path=target, line=0,
+            message=f"fixture recompile (expected): {msg.strip()}"))
+
+    try:
+        with jax.transfer_guard("disallow"):
+            jit_grow(np.zeros(64, np.int32))               # implicit h2d
+        # reaching here means the guard did NOT fire — drop no finding, the
+        # caller treats an empty list as a rotted fixture
+    except Exception as e:
+        findings.append(Finding(
+            rule="SH002", path=target, line=0,
+            message=f"fixture implicit transfer (expected): {e}"))
+
+    findings.extend(_ladder_findings(
+        [(5, 130)], floor=128, n_pair_devices=1, target=target))
+    return findings
+
+
+SHAPE_FIXTURES = ("shapes",)

@@ -213,11 +213,13 @@ class StreamingMiner:
         kill_point("miner:mid_append")
         # popcount is additive over word blocks, so the count matrix follows
         # the ring exactly: add the admitted block, subtract the evicted one.
-        self.cooc += cooccurrence_counts(jnp.asarray(new_block)).astype(np.int64)
+        self.cooc += cooccurrence_counts(
+            jax.device_put(new_block)).astype(np.int64)
         # admitted block counted, evicted block not yet subtracted
         kill_point("miner:mid_evict")
         if n_evicted or old_block.any():
-            self.cooc -= cooccurrence_counts(jnp.asarray(old_block)).astype(np.int64)
+            self.cooc -= cooccurrence_counts(
+                jax.device_put(old_block)).astype(np.int64)
         # the window's contents changed: new version.  Bumped only after the
         # ring AND the count matrix agree, so a crash between the kill points
         # above never publishes a version for a half-applied slide.

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import bitmap as bm
+from ..dist.compat import shard_map_unchecked
 from ..dist.sharding import padded_word_count, shard_words
 
 __all__ = ["WindowRing", "RingState"]
@@ -120,6 +121,36 @@ def _write_block(ring: jax.Array, block: jax.Array, start: jax.Array) -> jax.Arr
         return _write_block_jit(ring, block, start)
 
 
+def _make_sharded_writer(mesh: jax.sharding.Mesh, shard_axis: str,
+                         local_w: int):
+    """Shard-local block write for a word-sharded ring.
+
+    ``dynamic_update_slice`` on a ``P(None, axis)`` operand makes GSPMD
+    all-gather the *entire* ring onto every device each slide (measured:
+    one ``all-gather`` of the full word axis per push).  Instead each shard
+    rewrites only the written-span words it owns: the incoming block is
+    replicated, every shard masks its own word-index range against
+    ``[start, start+wpb)`` and selects — zero collectives in the lowered
+    module, which is exactly what the §7 ownership contract (and the
+    ``staticcheck`` ring-write contract) demands.
+    """
+    spec = jax.sharding.PartitionSpec(None, shard_axis)
+    rep = jax.sharding.PartitionSpec()
+
+    def _local_write(ring_local, block, start):
+        lo = jax.lax.axis_index(shard_axis).astype(jnp.int32) * local_w
+        widx = lo + jax.lax.iota(jnp.int32, ring_local.shape[1])
+        rel = widx - start
+        inside = (rel >= 0) & (rel < block.shape[1])
+        src = jnp.clip(rel, 0, block.shape[1] - 1)
+        return jnp.where(inside[None, :], block[:, src], ring_local)
+
+    return jax.jit(
+        shard_map_unchecked(_local_write, mesh=mesh,
+                            in_specs=(spec, rep, rep), out_specs=spec),
+        donate_argnums=(0,))
+
+
 class WindowRing:
     """Fixed-capacity sliding window: ``n_blocks`` blocks of ``block_txns``
     transaction columns each (``block_txns`` must be a multiple of 32 so block
@@ -164,10 +195,19 @@ class WindowRing:
             self.device = shard_words(
                 np.zeros((self.n_items, self.n_words_dev), np.uint32),
                 mesh, shard_axis)
+            self._write_sharded = _make_sharded_writer(
+                mesh, shard_axis, self.n_words_dev // self.n_shards)
+            # replicated placement for the incoming block / start scalar: a
+            # bare device_put commits to one device and the writer dispatch
+            # would reshard implicitly (blocked under transfer guards)
+            self._rep_sharding = jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec())
         else:
             self.n_shards = 1
             self.n_words_dev = self.n_words
             self.device = jnp.zeros((self.n_items, self.n_words), jnp.uint32)
+            self._write_sharded = None
+            self._rep_sharding = None
         self.block_counts = np.zeros(self.n_blocks, np.int64)  # txns per slot
         self.head = 0            # next slot to (over)write
         self.filled = 0          # slots holding live data
@@ -210,8 +250,19 @@ class WindowRing:
         old_block = self.words[:, span].copy()
         n_evicted = int(self.block_counts[slot])
         self.words[:, span] = new_block
-        self.device = _write_block(self.device, jnp.asarray(new_block),
-                                   jnp.int32(slot * self.wpb))
+        # Explicit uploads (never jnp.asarray on host state: staticcheck
+        # RS005) so the slide loop stays clean under transfer guards.
+        block_dev = jax.device_put(new_block, self._rep_sharding)
+        start_dev = jax.device_put(np.int32(slot * self.wpb),
+                                   self._rep_sharding)
+        if self._write_sharded is not None:
+            with warnings.catch_warnings():
+                warnings.filterwarnings(
+                    "ignore", message="Some donated buffers were not usable")
+                self.device = self._write_sharded(
+                    self.device, block_dev, start_dev)
+        else:
+            self.device = _write_block(self.device, block_dev, start_dev)
         self.block_counts[slot] = len(batch)
         if self._txns is not None:
             self._txns[slot] = [list(t) for t in batch]
@@ -253,7 +304,7 @@ class WindowRing:
         if self.mesh is not None:
             self.device = shard_words(self.words, self.mesh, self.shard_axis)
         else:
-            self.device = jnp.asarray(self.words)
+            self.device = jax.device_put(self.words)
         return self
 
     @classmethod
@@ -287,7 +338,7 @@ class WindowRing:
         checks (test hook *and* debugging aid), not ``assert`` statements,
         so they hold under ``python -O`` too.
         """
-        dev = np.asarray(self.device)
+        dev = jax.device_get(self.device)
         if dev.shape != (self.n_items, self.n_words_dev):
             raise RuntimeError(
                 f"device ring shape drifted: expected "

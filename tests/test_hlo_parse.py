@@ -1,0 +1,144 @@
+"""analysis.hlo_parse edge cases the IR contract layer leans on.
+
+The budgets in staticcheck.contracts are only as trustworthy as the HLO
+textual pass: a collective the parser drops (while bodies, ROOT-prefixed
+instructions, async -start/-done pairs) is traffic the budget silently
+stops bounding.  These tests pin the counting rules with synthetic HLO.
+"""
+import pytest
+
+from repro.analysis.hlo_parse import (CollectiveInstr, DTYPE_BYTES,
+                                      parse_collectives)
+
+
+def test_basic_all_reduce_counted_with_instr_record():
+    hlo = """
+HloModule m
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+ENTRY %e (x: f32[256]) -> f32[256] {
+  %x = f32[256]{0} parameter(0)
+  %all-reduce.1 = f32[256]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %r = f32[256]{0} copy(%all-reduce.1)
+}
+"""
+    stats = parse_collectives(hlo, n_devices=4)
+    assert stats.count == {"all-reduce": 1}
+    assert stats.bytes_raw["all-reduce"] == 256 * 4
+    # ring all-reduce: 2 (g-1)/g x bytes
+    assert stats.bytes_wire["all-reduce"] == pytest.approx(256 * 4 * 2 * 3 / 4)
+    (instr,) = stats.instrs
+    assert isinstance(instr, CollectiveInstr)
+    assert (instr.kind, instr.op, instr.group_size) == (
+        "all-reduce", "all-reduce", 4)
+    assert instr.line == 12
+
+
+def test_root_prefixed_collective_is_not_skipped():
+    # the tidsharded psum lowers to `ROOT %all-reduce...` inside the
+    # shard_map body computation — missing it voids the whole budget check
+    hlo = ("ROOT %all-reduce.7 = s32[256]{0} all-reduce(%p), "
+           "replica_groups={{0,1}}, to_apply=%add")
+    stats = parse_collectives(hlo, n_devices=2)
+    assert stats.count == {"all-reduce": 1}
+    assert stats.instrs[0].group_size == 2
+
+
+def test_while_body_collective_counted_once():
+    # HLO text holds each computation once; an all-gather inside a while
+    # body must contribute exactly one instruction (the roofline layer
+    # re-multiplies by trip count, not this pass)
+    hlo = """
+%body (s: (s32[], u32[64])) -> (s32[], u32[64]) {
+  %s = (s32[], u32[64]) parameter(0)
+  %v = u32[64]{0} get-tuple-element(%s), index=1
+  %all-gather.1 = u32[64]{0} all-gather(%v), replica_groups={{0,1}}, dimensions={0}
+  ROOT %t = (s32[], u32[64]) tuple(%i, %all-gather.1)
+}
+
+ENTRY %e (x: (s32[], u32[64])) -> (s32[], u32[64]) {
+  %x = (s32[], u32[64]) parameter(0)
+  ROOT %w = (s32[], u32[64]) while(%x), condition=%cond, body=%body
+}
+"""
+    stats = parse_collectives(hlo, n_devices=2)
+    assert stats.count == {"all-gather": 1}
+    assert stats.total_count == 1
+
+
+def test_async_start_done_pair_counted_once():
+    hlo = """
+  %all-reduce-start.1 = f32[128]{0} all-reduce-start(%x), replica_groups={{0,1}}, to_apply=%add
+  %all-reduce-done.1 = f32[128]{0} all-reduce-done(%all-reduce-start.1)
+"""
+    stats = parse_collectives(hlo, n_devices=2)
+    assert stats.count == {"all-reduce": 1}
+
+
+def test_replica_group_size_one_is_zero_wire():
+    # a degenerate group never crosses a link: raw bytes recorded, wire 0
+    hlo = ("%all-reduce.1 = f32[64]{0} all-reduce(%x), "
+           "replica_groups={{0}}, to_apply=%add")
+    stats = parse_collectives(hlo, n_devices=4)
+    assert stats.count == {"all-reduce": 1}
+    assert stats.bytes_raw["all-reduce"] == 64 * 4
+    assert stats.bytes_wire["all-reduce"] == 0.0
+    assert stats.instrs[0].group_size == 1
+
+
+def test_reduce_scatter_accounts_operand_not_result():
+    # reduce-scatter's result is 1/g of the operand; the wire cost is the
+    # operand's ring pass, so factor = g (g-1)/g over *result* bytes
+    g = 4
+    hlo = ("%reduce-scatter.1 = s32[64]{0} reduce-scatter(%p), "
+           "replica_groups={{0,1,2,3}}, dimensions={0}, to_apply=%add")
+    stats = parse_collectives(hlo, n_devices=g)
+    result_bytes = 64 * 4
+    assert stats.bytes_raw["reduce-scatter"] == result_bytes
+    assert stats.bytes_wire["reduce-scatter"] == pytest.approx(
+        result_bytes * g * (g - 1) / g)
+
+
+def test_unknown_dtype_raises_with_actionable_message():
+    hlo = ("%all-reduce.1 = q77[128]{0} all-reduce(%x), "
+           "replica_groups={{0,1}}, to_apply=%add")
+    with pytest.raises(ValueError, match=r"q77.*DTYPE_BYTES"):
+        parse_collectives(hlo, n_devices=2)
+
+
+def test_unknown_dtype_on_non_collective_is_ignored():
+    # only collective instructions are byte-accounted; exotic dtypes
+    # elsewhere in the module must not abort the parse
+    hlo = "%c = q77[128]{0} convert(%x)"
+    stats = parse_collectives(hlo, n_devices=2)
+    assert stats.total_count == 0
+
+
+def test_token_and_narrow_dtype_accounting():
+    assert DTYPE_BYTES["s4"] == 0.5
+    hlo = ("%all-gather.1 = (u32[32]{0}, token[]) all-gather(%v, %tok), "
+           "replica_groups={{0,1}}, dimensions={0}")
+    stats = parse_collectives(hlo, n_devices=2)
+    # token[] carries no payload; only the u32 result is accounted
+    assert stats.bytes_raw["all-gather"] == 32 * 4
+    assert stats.bytes_wire["all-gather"] == pytest.approx(32 * 4 * 1 / 2)
+
+
+def test_collective_permute_full_payload():
+    hlo = ("%collective-permute.1 = u32[16]{0} collective-permute(%v), "
+           "source_target_pairs={{0,1},{1,0}}")
+    stats = parse_collectives(hlo, n_devices=2)
+    assert stats.count == {"collective-permute": 1}
+    assert stats.bytes_wire["collective-permute"] == 16 * 4
+
+
+def test_iota_replica_groups_format():
+    hlo = ("%all-reduce.1 = f32[8]{0} all-reduce(%x), "
+           "replica_groups=[2,4]<=[8], to_apply=%add")
+    stats = parse_collectives(hlo, n_devices=8)
+    assert stats.instrs[0].group_size == 4

@@ -1,0 +1,243 @@
+"""repro.staticcheck: AST rules, IR contracts, shape audit, and the CI gate.
+
+Three properties are load-bearing:
+
+  * every committed must-fail fixture still fails (a fixture that passes
+    means the checker rotted — the gate's own acceptance criterion);
+  * the merged repo is clean under every layer;
+  * suppression comments work, so justified exceptions stay expressible.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+FIXTURE_DIR = os.path.join(ROOT, "src", "repro", "staticcheck", "fixtures")
+GATE = os.path.join(ROOT, "scripts", "check_static.py")
+
+
+# ---------------------------------------------------------------------------
+# layer 1: AST lint
+# ---------------------------------------------------------------------------
+
+class TestAstLint:
+    def test_every_rule_fixture_still_fails(self):
+        from repro.staticcheck import rule_ids
+        from repro.staticcheck.astlint import lint_file
+
+        for rid in rule_ids():
+            path = os.path.join(FIXTURE_DIR, f"{rid.lower()}_bad.py")
+            found = lint_file(path, root=ROOT)
+            assert any(f.rule == rid for f in found), (
+                f"fixture {path} no longer triggers {rid}")
+
+    def test_repo_strict_zones_lint_clean(self):
+        from repro.staticcheck import iter_python_files, lint_paths
+
+        files = iter_python_files(ROOT, [os.path.join("src", "repro"),
+                                         "scripts"])
+        assert len(files) > 50          # the walk actually found the repo
+        findings = lint_paths(files, root=ROOT)
+        assert findings == [], "\n".join(f.format() for f in findings)
+
+    def test_suppression_comment_silences_rule(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        src = textwrap.dedent("""\
+            import numpy as np
+
+            def group(q):
+                slots = np.empty(q, np.int64)  # staticcheck: disable=RS002
+                return slots
+        """)
+        p = tmp_path / "suppressed.py"
+        p.write_text(src)
+        assert lint_file(str(p)) == []
+        # same file without the suppression must fail
+        p.write_text(src.replace("  # staticcheck: disable=RS002", ""))
+        found = lint_file(str(p))
+        assert [f.rule for f in found] == ["RS002"]
+
+    def test_suppression_on_preceding_line(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        p = tmp_path / "prev_line.py"
+        p.write_text(textwrap.dedent("""\
+            import numpy as np
+
+            def group(q):
+                # staticcheck: disable=RS002
+                slots = np.empty(q, np.int64)
+                return slots
+        """))
+        assert lint_file(str(p)) == []
+
+    def test_rs003_allows_explicit_none_comparison(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        p = tmp_path / "ok003.py"
+        p.write_text(textwrap.dedent("""\
+            def depth(max_k):
+                if max_k is not None and max_k < 3:
+                    return max_k
+                return 10
+        """))
+        assert lint_file(str(p)) == []
+
+    def test_rs001_ignores_test_files(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        p = tmp_path / "test_something.py"
+        p.write_text("def test_x():\n    assert 1 + 1 == 2\n")
+        assert lint_file(str(p)) == []
+
+    def test_rs005_only_fires_in_hot_functions(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        # no hot-path pragma, not a registered hot module -> jnp.asarray ok
+        p = tmp_path / "cold.py"
+        p.write_text(textwrap.dedent("""\
+            import jax.numpy as jnp
+
+            def setup(x):
+                return jnp.asarray(x)
+        """))
+        assert lint_file(str(p)) == []
+
+    def test_warn_severity_override(self):
+        from repro.staticcheck.astlint import lint_file
+
+        path = os.path.join(FIXTURE_DIR, "rs001_bad.py")
+        found = lint_file(path, root=ROOT, severity="warning")
+        assert found and all(f.severity == "warning" for f in found)
+
+    def test_syntax_error_reported_not_raised(self, tmp_path):
+        from repro.staticcheck.astlint import lint_file
+
+        p = tmp_path / "broken.py"
+        p.write_text("def broken(:\n")
+        found = lint_file(str(p))
+        assert [f.rule for f in found] == ["RS000"]
+
+
+# ---------------------------------------------------------------------------
+# layer 2: lowered-IR contracts
+# ---------------------------------------------------------------------------
+
+class TestIrContracts:
+    def test_all_backends_match_declared_budgets(self, host_devices):
+        from repro.staticcheck.contracts import check_all_contracts
+
+        findings, summary = check_all_contracts()
+        assert findings == [], "\n".join(f.format() for f in findings)
+        got = {b: info["collectives"]
+               for b, info in summary["backends"].items()}
+        assert got == {
+            "jnp": {}, "pallas": {}, "sharded": {},
+            "tidsharded": {"all-reduce": 1}, "grid": {"all-reduce": 1},
+        }
+        # the word-sharded ring write must stay collective-free: a
+        # dynamic_update_slice on the sharded axis lowers to a whole-ring
+        # all-gather, which is exactly what this line would catch
+        assert summary["ring_write"]["collectives"] == {}
+
+    @pytest.mark.parametrize("name", ["extra_psum", "frontier_allgather",
+                                      "fat_psum", "wrong_axis_psum"])
+    def test_contract_fixtures_still_fail(self, host_devices, name):
+        from repro.staticcheck.contracts import check_contract_fixture
+
+        found = check_contract_fixture(name)
+        assert found, f"IR fixture {name} no longer violates its contract"
+        expected = {
+            "extra_psum": "IR001", "frontier_allgather": "IR001",
+            "fat_psum": "IR002", "wrong_axis_psum": "IR003",
+        }[name]
+        assert expected in {f.rule for f in found}
+
+
+# ---------------------------------------------------------------------------
+# layer 3: runtime-shape audit
+# ---------------------------------------------------------------------------
+
+class TestShapeAudit:
+    def test_streaming_steady_state_is_shape_closed(self):
+        from repro.staticcheck.shapes import audit_streaming
+
+        findings, summary = audit_streaming(backend="pallas")
+        assert findings == [], "\n".join(f.format() for f in findings)
+        assert summary["audited_slides"] >= 5
+        assert summary["itemsets_last_slide"] > 0
+
+    def test_tidsharded_stream_clean_under_guard(self, host_devices):
+        from repro.dist.compat import make_mesh
+        from repro.staticcheck.shapes import audit_streaming
+
+        mesh = make_mesh((4,), ("data",), devices=host_devices[:4])
+        findings, summary = audit_streaming(backend="tidsharded",
+                                            shard="words", mesh=mesh)
+        assert findings == [], "\n".join(f.format() for f in findings)
+        assert summary["audited_slides"] >= 5
+
+    def test_warm_mine_run_is_clean_and_deep(self):
+        from repro.staticcheck.shapes import audit_mine
+
+        findings, summary = audit_mine()
+        assert findings == [], "\n".join(f.format() for f in findings)
+        assert summary["levels"] >= 3
+
+    def test_shape_fixture_still_fails_all_three_rules(self):
+        from repro.staticcheck.shapes import check_shape_fixture
+
+        found = check_shape_fixture()
+        assert {"SH001", "SH002", "SH003"} <= {f.rule for f in found}
+
+
+# ---------------------------------------------------------------------------
+# the gate script (subprocess: exit codes are the CI contract)
+# ---------------------------------------------------------------------------
+
+def _run_gate(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, GATE, *args],
+                          capture_output=True, text=True, env=env, cwd=ROOT)
+
+
+class TestGateScript:
+    def test_lint_target_fixture_exits_one(self):
+        proc = _run_gate("--lint-target",
+                         os.path.join(FIXTURE_DIR, "rs004_bad.py"))
+        assert proc.returncode == 1, proc.stderr
+        assert "RS004" in proc.stderr
+
+    def test_lint_target_clean_file_exits_zero(self):
+        proc = _run_gate("--lint-target",
+                         os.path.join(ROOT, "scripts", "check_docs.py"))
+        assert proc.returncode == 0, proc.stderr
+
+    def test_contract_fixture_exits_one(self):
+        proc = _run_gate("--contract-fixture", "extra_psum")
+        assert proc.returncode == 1, proc.stderr
+        assert "IR001" in proc.stderr
+
+    def test_shape_fixture_exits_one(self):
+        proc = _run_gate("--shape-fixture")
+        assert proc.returncode == 1, proc.stderr
+        assert "SH001" in proc.stderr
+
+    def test_full_gate_passes_on_merged_repo(self, tmp_path):
+        report = tmp_path / "findings.json"
+        proc = _run_gate("--report", str(report))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "static: OK" in proc.stdout
+        assert report.exists()
+        import json
+        data = json.loads(report.read_text())
+        assert data["n_errors"] == 0
+        assert data["summary"]["lint_fixtures"]["rotted"] == 0
+        assert data["summary"]["ir_fixtures"]["rotted"] == 0
+        assert data["summary"]["shape_fixture"]["rotted"] == 0
